@@ -1,0 +1,65 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.roofline import roofline_row
+
+
+def rows(out_dir: Path, mesh: str | None = None):
+    out = []
+    for p in sorted(out_dir.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        out.append(rec)
+    return out
+
+
+def dryrun_table(out_dir: Path) -> str:
+    lines = ["| arch | shape | mesh | status | compile s | args GiB/dev | "
+             "temp GiB/dev | coll GiB/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for rec in rows(out_dir):
+        if rec["status"] == "skip":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']}"
+                         f" | skip | — | — | — | — |")
+            continue
+        m = rec.get("memory", {})
+        c = rec.get("collectives", {})
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | ok | "
+            f"{rec.get('compile_s', 0):.0f} | "
+            f"{m.get('argument_bytes', 0)/2**30:.2f} | "
+            f"{m.get('temp_bytes', 0)/2**30:.1f} | "
+            f"{c.get('total_bytes', 0)/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(out_dir: Path, mesh: str = "pod") -> str:
+    lines = ["| arch × shape | t_comp ms | t_mem ms | t_coll ms | bound | "
+             "MODEL/HLO FLOPs | roofline frac |",
+             "|---|---|---|---|---|---|---|"]
+    for rec in rows(out_dir, mesh):
+        if rec["status"] != "ok":
+            continue
+        r = roofline_row(rec)
+        cell = f"{rec['arch']} × {rec['shape']}"
+        lines.append(
+            f"| {cell} | {r['t_compute_s']*1e3:.2f} | "
+            f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+            f"{r['bottleneck']} | {r['useful_flop_frac']:.2f} | "
+            f"{r['roofline_frac']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    d = Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if which == "dryrun":
+        print(dryrun_table(d))
+    else:
+        print(roofline_table(d, sys.argv[3] if len(sys.argv) > 3
+                             else "pod"))

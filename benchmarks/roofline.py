@@ -1,0 +1,370 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+    compute    = HLO_FLOPs            / (peak_FLOP/s per chip)
+    memory     = HLO_bytes_accessed   / (HBM bytes/s per chip)
+    collective = collective_bytes     / (ICI bytes/s per link)
+
+cost_analysis() runs on the *partitioned* module, so FLOPs/bytes are
+per-device already.  collective_bytes is NOT in cost_analysis — we parse the
+compiled HLO text: every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute op contributes its (per-device, post-SPMD)
+payload bytes times an op-specific ring factor, times the trip count of any
+enclosing while loop (scan bodies execute num_layers times — counting them
+once would undercount collectives ~60x on a deepseek-67b).
+
+Trip counts are recovered from each while's condition computation (the loop
+bound is the max integer literal in the compare), and multipliers compose
+through the call graph (nested scans multiply).
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+import numpy as np
+
+PEAK_FLOPS = 197e12      # TPU v5e bf16
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every array shape literal in `text`."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [ngroups,group_size]
+        return int(m.group(2))
+    return default
+
+
+def _ring_factor(op: str, g: int) -> float:
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if op in ("all-gather", "all-to-all"):
+        return (g - 1) / g
+    if op == "reduce-scatter":
+        return float(g - 1)   # result shape is the scattered (small) shard
+    return 1.0                # collective-permute
+
+
+def parse_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> list of op lines.
+
+    A computation header is a line-initial `%name (...) -> ... {` or
+    `ENTRY %name ... {`; nested parens in tuple-typed params make a regex
+    over the param list unreliable, so we key off the opening brace only.
+    """
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if cur is None:
+            if not s.endswith("{"):
+                continue
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", s)
+            if m and not line.startswith(" "):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+        elif s:
+            comps[cur].append(s)
+    return comps
+
+
+def _while_info(comps: dict[str, list[str]]):
+    """[(body, cond, trip)] for every while op found."""
+    infos = []
+    for lines in comps.values():
+        for ln in lines:
+            if " while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if not (mb and mc):
+                    continue
+                trip = 1
+                cond_lines = comps.get(mc.group(1), [])
+                consts = []
+                for cl in cond_lines:
+                    consts += [int(x) for x in
+                               re.findall(r"constant\((\d+)\)", cl)]
+                if consts:
+                    trip = max(consts)
+                infos.append((mb.group(1), mc.group(1), max(trip, 1)))
+    return infos
+
+
+def _call_multipliers(comps: dict[str, list[str]]) -> dict[str, int]:
+    """computation -> product of enclosing while trip counts."""
+    whiles = _while_info(comps)
+    body_trip = {b: t for b, _, t in whiles}
+    # call graph: comp -> comps it invokes (calls/to_apply/body/condition).
+    # One name per keyword — a greedy multi-name tail would swallow the
+    # following ", body=..." keyword and drop the loop-body edge entirely.
+    edge_re = re.compile(r"(?:to_apply|calls|body|condition)=%?([\w\.\-]+)")
+    list_re = re.compile(r"branch_computations=\{([^}]*)\}")
+    calls: dict[str, set[str]] = {c: set() for c in comps}
+    for c, lines in comps.items():
+        for ln in lines:
+            for m in edge_re.finditer(ln):
+                calls[c].add(m.group(1))
+            for m in list_re.finditer(ln):
+                for name in m.group(1).split(","):
+                    calls[c].add(name.strip().lstrip("%"))
+    mult: dict[str, int] = {}
+
+    # roots: the real entry ("main*") when present — dead loop clones left
+    # behind by loop transformations must NOT be visited, or their dots and
+    # collectives get phantom-counted
+    roots = [c for c in comps if c.startswith("main")] or \
+        [c for c in comps if not any(c in v for v in calls.values())]
+
+    def visit(comp: str, m: int):
+        if comp not in comps:
+            return
+        if mult.get(comp, 0) >= m:
+            return
+        mult[comp] = max(mult.get(comp, 0), m)
+        for callee in calls.get(comp, ()):
+            mm = m * body_trip.get(callee, 1)
+            visit(callee, mm)
+
+    for e in roots:
+        visit(e, 1)
+    return mult
+
+
+def _shape_dims(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype,
+                        [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+_DOT_DIMS_RE = {
+    k: re.compile(rf"{k}={{([\d,]*)}}")
+    for k in ("lhs_batch_dims", "lhs_contracting_dims",
+              "rhs_batch_dims", "rhs_contracting_dims")
+}
+
+
+def dot_flops_from_hlo(hlo: str) -> float:
+    """Trip-count-aware MAC count of every `dot` in the compiled module.
+
+    CPU cost_analysis counts a while-loop body ONCE, so a 95-layer scanned
+    model reports ~1/95th of its real FLOPs; this walks the call graph with
+    the same trip multipliers as the collective parser and computes
+    2·batch·M·N·K per dot from the operand shapes.
+    """
+    comps = parse_computations(hlo)
+    mult = _call_multipliers(comps)
+    total = 0.0
+    for comp, lines in comps.items():
+        if comp not in mult:
+            continue  # unreachable (dead loop clone) — do not count
+        m = mult[comp]
+        # shape table for this computation (every op line defines its shape)
+        shapes: dict[str, list[int]] = {}
+        for ln in lines:
+            mm = re.match(r"(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*([^\s]+)", ln)
+            if mm:
+                dims = _shape_dims(mm.group(2))
+                if dims:
+                    shapes[mm.group(1)] = dims[0][1]
+        for ln in lines:
+            if " dot(" not in ln:
+                continue
+            ops = re.search(r"dot\(([^)]*)\)", ln)
+            if not ops:
+                continue
+            names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+            if len(names) < 2:
+                continue
+            lhs = shapes.get(names[0])
+            rhs = shapes.get(names[1])
+            if lhs is None or rhs is None:
+                continue
+            dims = {k: ([int(x) for x in r.search(ln).group(1).split(",")]
+                        if r.search(ln) and r.search(ln).group(1) else [])
+                    for k, r in _DOT_DIMS_RE.items()}
+            K = int(np.prod([lhs[i] for i in
+                             dims["lhs_contracting_dims"]])) \
+                if dims["lhs_contracting_dims"] else 1
+            Bt = int(np.prod([lhs[i] for i in dims["lhs_batch_dims"]])) \
+                if dims["lhs_batch_dims"] else 1
+            M = int(np.prod(lhs)) // max(K * Bt, 1)
+            N = int(np.prod(rhs)) // max(K * Bt, 1)
+            total += 2.0 * Bt * M * N * K * m
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum per-device collective payload bytes, trip-count aware."""
+    comps = parse_computations(hlo)
+    mult = _call_multipliers(comps)
+    per_op: dict[str, float] = {}
+    total = 0.0
+    raw = 0.0
+    for comp, lines in comps.items():
+        if comp not in mult:
+            continue  # unreachable (dead loop clone)
+        m = mult[comp]
+        for ln in lines:
+            for op in _COLLECTIVES:
+                # "%x = TYPE op(...)" — match op name as the instruction
+                if re.search(rf"=\s*[^=]*\b{op}\(", ln) or \
+                        re.search(rf"\b{op}(?:\.\d+)?\s*=", ln) or \
+                        f" {op}(" in ln:
+                    lhs = ln.split("=", 1)[-1]
+                    lhs = lhs.split(op + "(", 1)[0]
+                    size = _shape_bytes(lhs)
+                    g = _group_size(ln)
+                    b = size * _ring_factor(op, g) * m
+                    per_op[op] = per_op.get(op, 0.0) + b
+                    total += b
+                    raw += size
+                    break
+    return {"total_bytes": total, "raw_result_bytes": raw,
+            "per_op_bytes": per_op}
+
+
+# ---------------------------------------------------------------------------
+# Report over dry-run JSON records
+# ---------------------------------------------------------------------------
+def analytic_hbm_bytes(rec: dict) -> float:
+    """Per-device HBM traffic model for one step (TPU fusion assumed).
+
+    CPU cost_analysis' "bytes accessed" is pre-fusion (every op's operands
+    re-counted) and misses loop trip counts, so the memory term comes from
+    an explicit model instead:
+
+      train:   3x param reads (fwd + remat re-fwd + bwd) + grad write
+               + AdamW state read/write (2 moments, f32, r+w)
+               + activation streams: C_ACT x L x tokens x D (fwd+bwd)
+               + CE logits (chunked): 2 passes over tokens x V_local x f32
+      prefill: 1x param read + C_ACT/2 activation streams + KV-cache write
+      decode:  active-param read + full KV/state-cache read + write of 1 tok
+    """
+    dev = max(rec.get("n_devices", 1), 1)
+    P = rec.get("params", 0) / dev            # per-device param count
+    P_act = rec.get("active_params", 0) / dev
+    kind = rec.get("kind")
+    B = rec.get("global_batch", 0)
+    S = rec.get("seq_len", 0)
+    # batch shards over pod x data = dev/16 (model axis = 16)
+    toks_loc = B * S / max(dev / 16, 1) if kind != "decode" else \
+        B * 1 / max(dev / 16, 1)
+    arch = rec.get("arch", "")
+    D = {"jamba-v0.1-52b": 4096, "deepseek-67b": 8192, "gemma2-9b": 3584,
+         "qwen1.5-110b": 8192, "gemma2-2b": 2304, "whisper-tiny": 384,
+         "qwen2-vl-72b": 8192, "granite-moe-1b-a400m": 1024,
+         "kimi-k2-1t-a32b": 7168, "rwkv6-3b": 2560}.get(arch, 4096)
+    L = {"jamba-v0.1-52b": 32, "deepseek-67b": 95, "gemma2-9b": 42,
+         "qwen1.5-110b": 80, "gemma2-2b": 26, "whisper-tiny": 8,
+         "qwen2-vl-72b": 80, "granite-moe-1b-a400m": 24,
+         "kimi-k2-1t-a32b": 61, "rwkv6-3b": 32}.get(arch, 32)
+    V_loc = {"jamba-v0.1-52b": 65536, "deepseek-67b": 102400,
+             "gemma2-9b": 256000, "qwen1.5-110b": 152064,
+             "gemma2-2b": 256000, "whisper-tiny": 51865,
+             "qwen2-vl-72b": 152064, "granite-moe-1b-a400m": 49155,
+             "kimi-k2-1t-a32b": 163840, "rwkv6-3b": 65536}.get(
+        arch, 65536) / 16
+    C_ACT = 16  # activation stream r/w coefficient per layer (fwd+bwd)
+    if kind == "train":
+        return (3 * P * 2 + P * 2          # param reads + grad write
+                + P * 4 * 2 * 2            # mu, nu f32 read+write
+                + C_ACT * L * toks_loc * D * 2
+                + 2 * toks_loc * V_loc * 4)
+    if kind == "prefill":
+        cache = toks_loc * D * 2 * 2       # K+V bf16 write
+        return P * 2 + (C_ACT / 2) * L * toks_loc * D * 2 + cache
+    # decode: stream active params + the whole cache once
+    cache_bytes = rec.get("memory", {}).get("argument_bytes", 0) - P * 10
+    cache_bytes = max(cache_bytes, 0)
+    return P_act * 2 + cache_bytes + toks_loc * D * 2 * L
+
+
+def roofline_row(rec: dict) -> dict:
+    cost = rec.get("cost", {})
+    flops = rec.get("dot_flops") or cost.get("flops", 0.0)
+    coll = rec.get("collectives", {}).get("total_bytes", 0.0)
+    bytes_model = analytic_hbm_bytes(rec)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_model / HBM_BW
+    t_i = coll / ICI_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_i, "collective"))
+    # model FLOPs: 6 * N_active * tokens for train, 2 * N_active * tokens
+    # for inference steps (per device)
+    n_act = rec.get("active_params", 0)
+    toks = rec.get("global_batch", 0) * (
+        rec.get("seq_len", 0) if rec.get("kind") in ("train", "prefill")
+        else 1)
+    factor = 6 if rec.get("kind") == "train" else 2
+    model_flops = factor * n_act * toks / max(rec.get("n_devices", 1), 1)
+    return {
+        "cell": f"{rec['arch']} x {rec['shape']} x {rec['mesh']}",
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_i,
+        "bottleneck": dominant[1],
+        "hlo_flops": flops,
+        "model_flops": model_flops,
+        "useful_flop_frac": (model_flops / flops) if flops else 0.0,
+        "roofline_frac": (t_c / max(t_c, t_m, t_i)
+                          if max(t_c, t_m, t_i) > 0 else 0.0),
+        "step_time_lb_s": max(t_c, t_m, t_i),
+    }
+
+
+def main() -> None:
+    out_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    rows = []
+    for p in sorted(out_dir.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "ok":
+            continue
+        rows.append(roofline_row(rec))
+    hdr = (f"{'cell':58s} {'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+           f"{'bound':>10s} {'MF/HF':>6s} {'roofl':>6s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['cell']:58s} {r['t_compute_s']:9.4f} "
+              f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+              f"{r['bottleneck']:>10s} {r['useful_flop_frac']:6.2f} "
+              f"{r['roofline_frac']:6.2f}")
+
+
+if __name__ == "__main__":
+    main()

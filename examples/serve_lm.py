@@ -1,0 +1,14 @@
+"""Serving example: batched prefill + decode (thin wrapper over the
+production driver, repro/launch/serve.py).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "gemma2-2b", "--reduced",
+                "--batch", "4", "--prompt-len", "32", "--gen", "32",
+                *sys.argv[1:]]
+    main()

@@ -1,0 +1,171 @@
+"""Atomic, async, mesh-agnostic checkpointing.
+
+Format: one directory per step —
+    step_000123/
+      meta.json            (step, flat key list, shapes/dtypes, extra)
+      arrays.npz           (flattened pytree, logically-global arrays)
+      .complete            (commit marker; written LAST)
+
+Writes go to ``<dir>.tmp`` then os.replace -> atomic; readers only trust
+directories with the commit marker, so a killed writer never corrupts the
+latest checkpoint (crash-consistency is tested by killing mid-write in
+tests/test_checkpoint.py).
+
+Checkpoints are *mesh-agnostic*: arrays are saved as logical (unsharded)
+values and restored under whatever sharding the new mesh dictates — the
+elastic-rescale path (runtime/elastic.py) is just load() + device_put.
+
+`AsyncCheckpointer` overlaps serialization with the next train step
+(one-deep queue, matching typical at-scale checkpoint cadence).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_MARKER = ".complete"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":   # npz can't store ml_dtypes
+            arr = arr.view(np.uint16)
+            out["__bf16__" + jax.tree_util.keystr(path)] = arr
+        else:
+            out[jax.tree_util.keystr(path)] = arr
+    return out
+
+
+def _unflatten_arrays(arrays: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    import ml_dtypes
+    out = {}
+    for k, v in arrays.items():
+        if k.startswith("__bf16__"):
+            out[k[len("__bf16__"):]] = v.view(ml_dtypes.bfloat16)
+        else:
+            out[k] = v
+    return out
+
+
+def save(directory: str | Path, step: int, tree: Any,
+         extra: Optional[dict] = None) -> Path:
+    """Blocking atomic save. Returns the committed checkpoint path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:09d}"
+    tmp = directory / f"step_{step:09d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    arrays = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **arrays)
+    meta = {
+        "step": step,
+        "keys": list(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    (tmp / _MARKER).touch()
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.iterdir()
+             if p.name.startswith("step_") and not p.name.endswith(".tmp")
+             and (p / _MARKER).exists()]
+    return max(steps) if steps else None
+
+
+def load(directory: str | Path, step: Optional[int] = None,
+         target: Any = None) -> tuple[int, Any, dict]:
+    """Load (step, tree, extra). With `target`, restores pytree structure
+    (and device_puts onto target's shardings if it holds concrete arrays)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {directory}")
+    path = directory / f"step_{step:09d}"
+    if not (path / _MARKER).exists():
+        raise FileNotFoundError(f"checkpoint {path} incomplete")
+    meta = json.loads((path / "meta.json").read_text())
+    arrays = _unflatten_arrays(dict(np.load(path / "arrays.npz")))
+    if target is None:
+        return step, arrays, meta["extra"]
+    flat = jax.tree_util.tree_flatten_with_path(target)
+    leaves, treedef = flat
+    out = []
+    for p, leaf in leaves:
+        key = jax.tree_util.keystr(p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        val = arrays[key]
+        if hasattr(leaf, "sharding") and hasattr(leaf, "shape"):
+            val = jax.device_put(val.astype(leaf.dtype), leaf.sharding)
+        out.append(val)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return step, tree, meta["extra"]
+
+
+def gc_old(directory: str | Path, keep: int = 3) -> None:
+    directory = Path(directory)
+    if not directory.exists():
+        return
+    steps = sorted(
+        p for p in directory.iterdir()
+        if p.name.startswith("step_") and (p / _MARKER).exists())
+    for p in steps[:-keep]:
+        shutil.rmtree(p)
+
+
+class AsyncCheckpointer:
+    """One-deep background writer: save() returns immediately; a second
+    save blocks until the first commit finishes (bounded staleness)."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        # snapshot to host before returning control to the train loop
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def _run():
+            try:
+                save(self.directory, step, host_tree, extra)
+                gc_old(self.directory, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

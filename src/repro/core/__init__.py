@@ -1,0 +1,25 @@
+"""Core p-bit probabilistic computing library (the paper's contribution)."""
+from repro.core.chimera import ChimeraGraph, make_chimera, make_chip_graph
+from repro.core.hardware import (
+    EffectiveChip,
+    HardwareConfig,
+    Mismatch,
+    ideal_chip,
+    program_weights,
+    sample_mismatch,
+)
+from repro.core.cd import CDConfig, PBitMachine, train_cd
+from repro.core.annealing import AnnealConfig, anneal, sk_instance
+from repro.core.maxcut import random_chimera_maxcut, solve_maxcut
+
+__all__ = [
+    "ChimeraGraph", "make_chimera", "make_chip_graph",
+    "EffectiveChip", "HardwareConfig", "Mismatch", "ideal_chip",
+    "program_weights", "sample_mismatch",
+    "CDConfig", "PBitMachine", "train_cd",
+    "AnnealConfig", "anneal", "sk_instance",
+    "random_chimera_maxcut", "solve_maxcut",
+]
+from repro.core.tempering import PTConfig, parallel_tempering  # noqa: E402
+
+__all__ += ["PTConfig", "parallel_tempering"]

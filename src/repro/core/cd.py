@@ -1,0 +1,237 @@
+"""In-situ hardware-aware learning: contrastive divergence through the chip.
+
+Paper Fig. 7a: the training loop alternates
+  positive phase  — clamp the visible nodes to data, Gibbs-sample the hidden
+                    nodes *on the (mismatched) chip*, measure <m_i m_j>+.
+  negative phase  — release the clamp, free-run the chip k sweeps, measure
+                    <m_i m_j>-.
+  update          — J_ij += lr (<mimj>+ - <mimj>-) on the physical couplers,
+                    h_i  += lr (<mi>+   - <mi>-),
+then re-program the 8-bit weight DACs.  Because both phases are sampled
+through the same analog non-idealities, the learned weights absorb the
+mismatch — the paper's central claim (we verify it in
+tests/test_cd.py::test_hardware_aware_beats_transfer).
+
+Weights are kept as float "master" values (the host accumulator) and
+quantized to signed 8-bit DAC codes on every (re)program, matching the
+chip's digital weight storage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as energy_mod
+from repro.core import pbit
+from repro.core.chimera import ChimeraGraph
+from repro.core.hardware import (
+    WMAX,
+    WMIN,
+    EffectiveChip,
+    HardwareConfig,
+    Mismatch,
+    program_weights,
+    sample_mismatch,
+)
+
+
+@dataclasses.dataclass
+class PBitMachine:
+    """A (simulated) chip instance: graph + mismatch + programmable weights."""
+
+    graph: ChimeraGraph
+    hw: HardwareConfig
+    mismatch: Mismatch
+    beta: float = 1.0
+    noise: str = "philox"  # or "lfsr"
+    w_scale: float = 0.05  # weight-LSB -> coupling units (ext. resistor knob)
+
+    @staticmethod
+    def create(graph: ChimeraGraph, key: jax.Array,
+               hw: HardwareConfig | None = None, **kw) -> "PBitMachine":
+        hw = hw or HardwareConfig()
+        return PBitMachine(
+            graph=graph, hw=hw,
+            mismatch=sample_mismatch(key, graph.n_nodes, hw), **kw)
+
+    # -- programming ----------------------------------------------------
+    def program(self, J_codes: jax.Array, h_codes: jax.Array,
+                enable: jax.Array | None = None) -> EffectiveChip:
+        adj = jnp.asarray(self.graph.adjacency())
+        if enable is None:
+            enable = jnp.abs(J_codes) > 0
+        chip = program_weights(J_codes, h_codes, enable, self.mismatch,
+                               self.hw, adjacency=adj)
+        # external-resistor scale: DAC LSB units -> neuron-input units
+        return dataclasses.replace(
+            chip, W=chip.W * self.w_scale, h=chip.h * self.w_scale)
+
+    def noise_fn(self, key: jax.Array, batch: int):
+        if self.noise == "lfsr":
+            init, step = pbit.make_lfsr_noise(self.graph, batch)
+            return init(key), step
+        return key, pbit.make_philox_noise(batch, self.graph.n_nodes)
+
+
+def quantize_codes(w: jax.Array, lsb: float = 1.0) -> jax.Array:
+    """Float master weights -> signed 8-bit DAC codes."""
+    return jnp.clip(jnp.round(w / lsb), WMIN, WMAX).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class CDConfig:
+    lr: float = 4.0            # in DAC-LSB units per unit correlation error
+    cd_k: int = 10             # sweeps per negative phase
+    pos_sweeps: int = 10       # sweeps with visibles clamped
+    burn_in: int = 2
+    chains: int = 256          # parallel Gibbs chains (chip reprogram batches)
+    epochs: int = 60
+    h_lr_scale: float = 1.0
+    weight_decay: float = 0.0
+    # beyond-paper options (EXPERIMENTS §Perf extensions):
+    persistent: bool = False   # PCD: negative chains persist across epochs
+                               # instead of restarting from the data clamp
+    momentum: float = 0.0      # heavy-ball on the correlation gradient
+
+
+def _phase_stats(machine, chip, color, edges, m0, n_sweeps, burn_in,
+                 noise_state, noise_fn, clamp_mask=None, clamp_values=None):
+    return pbit.gibbs_stats(
+        chip, color, m0, machine.beta, n_sweeps, burn_in,
+        noise_state, noise_fn, edges,
+        clamp_mask=clamp_mask, clamp_values=clamp_values)
+
+
+def make_cd_step(machine: PBitMachine, cfg: CDConfig,
+                 visible_idx: np.ndarray):
+    """Build the jitted one-epoch CD update.
+
+    Returns step(Jm, hm, data_vis, m, noise_state) ->
+      (Jm, hm, m, noise_state, metrics) where Jm/hm are float master weights,
+    data_vis is (chains, n_visible) ±1 data samples for the positive phase.
+    """
+    g = machine.graph
+    edges = jnp.asarray(g.edges)
+    color = jnp.asarray(g.color)
+    n = g.n_nodes
+    vis = jnp.asarray(visible_idx)
+    clamp_mask = jnp.zeros((n,), bool).at[vis].set(True)
+    e0, e1 = edges[:, 0], edges[:, 1]
+
+    # the noise *step* fn is static (closed over scatter tables); the noise
+    # *state* threads through `step` as a carry.
+    _, noise_fn = machine.noise_fn(jax.random.PRNGKey(0), cfg.chains)
+
+    @jax.jit
+    def step(Jm, hm, data_vis, m, noise_state, vel):
+        chip = machine.program(quantize_codes(Jm), quantize_codes(hm))
+        clamp_values = jnp.zeros((cfg.chains, n), jnp.float32)
+        clamp_values = clamp_values.at[:, vis].set(data_vis)
+
+        # positive phase: visibles pinned to data
+        pos_s, pos_c, m_pos, noise_state = _phase_stats(
+            machine, chip, color, edges, m, cfg.pos_sweeps, cfg.burn_in,
+            noise_state, noise_fn, clamp_mask, clamp_values)
+        # negative phase: CD-k from the positive-phase state, or from the
+        # persistent chains (PCD — the chip never reinitializes; it just
+        # keeps free-running between weight reprograms)
+        neg_init = m if cfg.persistent else m_pos
+        neg_s, neg_c, m_neg, noise_state = _phase_stats(
+            machine, chip, color, edges, neg_init, cfg.cd_k, cfg.burn_in,
+            noise_state, noise_fn)
+
+        gJ = pos_c - neg_c
+        gh = pos_s - neg_s
+        vel_J, vel_h = vel
+        vel_J = cfg.momentum * vel_J + gJ
+        vel_h = cfg.momentum * vel_h + gh
+        dJ_edge = cfg.lr * vel_J
+        dh = cfg.lr * cfg.h_lr_scale * vel_h
+        dJ = jnp.zeros((n, n), jnp.float32)
+        dJ = dJ.at[e0, e1].add(dJ_edge)
+        dJ = dJ.at[e1, e0].add(dJ_edge)
+        Jm = (1.0 - cfg.weight_decay) * Jm + dJ
+        hm = (1.0 - cfg.weight_decay) * hm + dh
+        Jm = jnp.clip(Jm, WMIN, WMAX)
+        hm = jnp.clip(hm, WMIN, WMAX)
+        metrics = {
+            "corr_err": jnp.abs(pos_c - neg_c).mean(),
+            "mean_err": jnp.abs(pos_s - neg_s).mean(),
+        }
+        return Jm, hm, m_neg, noise_state, (vel_J, vel_h), metrics
+
+    return step
+
+
+def sample_visible_dist(machine: PBitMachine, Jm, hm,
+                        visible_idx: np.ndarray, key: jax.Array,
+                        chains: int = 256, sweeps: int = 200,
+                        burn_in: int = 20) -> np.ndarray:
+    """Free-run the programmed chip and histogram the visible marginal."""
+    g = machine.graph
+    chip = machine.program(quantize_codes(Jm), quantize_codes(hm))
+    k1, k2 = jax.random.split(key)
+    m0 = pbit.random_spins(k1, chains, g.n_nodes)
+    noise_state, noise_fn = machine.noise_fn(k2, chains)
+    betas = jnp.full((sweeps,), machine.beta, jnp.float32)
+    _, _, traj = pbit.gibbs_sample(
+        chip, jnp.asarray(g.color), m0, betas, noise_state, noise_fn,
+        collect=True)
+    samples = np.asarray(traj[burn_in:]).reshape(-1, g.n_nodes)
+    return energy_mod.empirical_visible_dist(samples, visible_idx)
+
+
+@dataclasses.dataclass
+class CDResult:
+    Jm: np.ndarray
+    hm: np.ndarray
+    kl_history: list
+    metric_history: list
+
+
+def train_cd(
+    machine: PBitMachine,
+    visible_idx: np.ndarray,
+    target_dist: np.ndarray,
+    cfg: CDConfig,
+    key: jax.Array,
+    eval_every: int = 10,
+    verbose: bool = False,
+) -> CDResult:
+    """Full in-situ CD training loop against a target visible distribution."""
+    g = machine.graph
+    n, nv = g.n_nodes, len(visible_idx)
+    step = make_cd_step(machine, cfg, visible_idx)
+
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    Jm = jnp.zeros((n, n), jnp.float32)
+    hm = jnp.zeros((n,), jnp.float32)
+    m = pbit.random_spins(k1, cfg.chains, n)
+    noise_state, _ = machine.noise_fn(k2, cfg.chains)
+
+    # enumerate visible configs for sampling data from the target dist
+    codes = energy_mod.all_states(nv)  # (2^nv, nv) ±1, code order
+    vel = (jnp.zeros((g.n_edges,), jnp.float32),
+           jnp.zeros((n,), jnp.float32))
+    kl_hist, met_hist = [], []
+    for epoch in range(cfg.epochs):
+        key, kd, ke = jax.random.split(key, 3)
+        idx = jax.random.choice(
+            kd, codes.shape[0], (cfg.chains,), p=jnp.asarray(target_dist))
+        data_vis = jnp.asarray(codes)[idx]
+        Jm, hm, m, noise_state, vel, metrics = step(Jm, hm, data_vis, m,
+                                                    noise_state, vel)
+        met_hist.append({k: float(v) for k, v in metrics.items()})
+        if (epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1:
+            emp = sample_visible_dist(machine, Jm, hm, visible_idx, ke)
+            kl = energy_mod.kl_divergence(np.asarray(target_dist), emp)
+            kl_hist.append((epoch + 1, kl))
+            if verbose:
+                print(f"epoch {epoch+1:4d}  KL={kl:.4f}  "
+                      f"corr_err={met_hist[-1]['corr_err']:.4f}")
+    return CDResult(np.asarray(Jm), np.asarray(hm), kl_hist, met_hist)

@@ -1,0 +1,341 @@
+"""Pod-scale Chimera lattices: spatial sharding + halo exchange.
+
+The paper's chip is a 7x8-cell tile.  This module scales the same physics to
+wafer/pod-size lattices (10^6..10^8 p-bits) by tiling the Chimera *cell grid*
+over the device mesh: grid rows -> mesh axis "data" (and "pod"), grid cols ->
+mesh axis "model".  Each device owns a (tile_r, tile_c, 4)-shaped SoA block
+of vertical+horizontal spins and the couplers incident to them; the only
+communication per half-sweep is a 1-cell halo exchange of boundary spins via
+``jax.lax.ppermute`` — O(boundary), exactly like the chip's inter-cell wires.
+
+Structure-of-arrays layout (no dense J at scale):
+  m_v, m_h           (R, C, 4)    vertical / horizontal spins per cell
+  W_vh, W_hv         (R, C, 4, 4) in-cell K44, directional (mismatch!)
+  Wv_dn, Wv_up       (R, C, 4)    vertical inter-cell coupler below cell
+                                  (directional: into r+1 resp. into r)
+  Wh_rt, Wh_lt       (R, C, 4)    horizontal coupler to the right of cell
+  h_v, h_h           (R, C, 4)
+plus per-node neuron mismatch (tanh gain/offset, rand gain, comparator).
+
+Chromatic order: color(r, c, side) = (r + c + side) % 2 — a half-sweep for
+color k updates the vertical nodes of parity-k cells and the horizontal
+nodes of parity-(1-k) cells, all in parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hardware import HardwareConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LatticeSpec:
+    cell_rows: int
+    cell_cols: int
+    k: int = 4
+    beta: float = 1.0
+    chains: int = 1   # Gibbs replicas per device tile: couplings are read
+                      # from HBM once per half-sweep and serve all chains
+                      # (arithmetic intensity x chains — §Perf pbit cell)
+
+    @property
+    def n_spins(self) -> int:
+        return self.cell_rows * self.cell_cols * 2 * self.k
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LatticeState:
+    m_v: jax.Array
+    m_h: jax.Array
+
+    def tree_flatten(self):
+        return (self.m_v, self.m_h), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LatticeChip:
+    """Effective (post-mismatch) lattice couplings + neuron params."""
+    W_vh: jax.Array
+    W_hv: jax.Array
+    Wv_dn: jax.Array
+    Wv_up: jax.Array
+    Wh_rt: jax.Array
+    Wh_lt: jax.Array
+    h_v: jax.Array
+    h_h: jax.Array
+    gain_v: jax.Array
+    gain_h: jax.Array
+    off_v: jax.Array
+    off_h: jax.Array
+
+    def tree_flatten(self):
+        f = dataclasses.fields(self)
+        return tuple(getattr(self, x.name) for x in f), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch)
+
+
+def make_sk_lattice(spec: LatticeSpec, key: jax.Array,
+                    hw: HardwareConfig | None = None,
+                    dtype=jnp.float32) -> LatticeChip:
+    """Random SK-style lattice instance with per-site mismatch baked in.
+
+    Pure function of (spec, key) — under pjit each device materializes only
+    its own shard (random bits are generated sharded).
+    """
+    hw = hw or HardwareConfig()
+    R, C, k = spec.cell_rows, spec.cell_cols, spec.k
+    ks = jax.random.split(key, 12)
+
+    def g(i, shape, scale=1.0):
+        return scale * jax.random.normal(ks[i], shape, dtype)
+
+    W_cell = g(0, (R, C, k, k), 0.8)                      # shared edge DAC
+    mis = lambda i, shape: 1.0 + hw.sigma_edge_gain * g(i, shape)
+    Wv = g(1, (R, C, k), 0.8)
+    Wh = g(2, (R, C, k), 0.8)
+    row = jnp.arange(R)[:, None, None]
+    col = jnp.arange(C)[None, :, None]
+    # no couplers past the lattice edge
+    Wv = Wv * (row < R - 1)
+    Wh = Wh * (col < C - 1)
+    return LatticeChip(
+        W_vh=W_cell * mis(3, (R, C, k, k)),
+        W_hv=jnp.swapaxes(W_cell, -1, -2) * mis(4, (R, C, k, k)),
+        Wv_dn=Wv * (1.0 + hw.sigma_edge_gain * g(5, (R, C, k))),
+        Wv_up=Wv * (1.0 + hw.sigma_edge_gain * g(6, (R, C, k))),
+        Wh_rt=Wh * (1.0 + hw.sigma_edge_gain * g(7, (R, C, k))),
+        Wh_lt=Wh * (1.0 + hw.sigma_edge_gain * g(8, (R, C, k))),
+        h_v=jnp.zeros((R, C, k), dtype),
+        h_h=jnp.zeros((R, C, k), dtype),
+        gain_v=1.0 + hw.sigma_tanh_gain * g(9, (R, C, k)),
+        gain_h=1.0 + hw.sigma_tanh_gain * g(10, (R, C, k)),
+        off_v=hw.sigma_tanh_offset * 0.01 * g(11, (R, C, k)),
+        off_h=jnp.zeros((R, C, k), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Halo exchange
+# ---------------------------------------------------------------------------
+def _shift_rows(x: jax.Array, direction: int, axis_name: str | None,
+                n_shards: int) -> jax.Array:
+    """Neighbor-row view of x along the cell-row dim (dim 0).
+
+    direction=+1: returns x_up  s.t. x_up[r] = x[r-1] (row from above),
+    direction=-1: returns x_dn  s.t. x_dn[r] = x[r+1].
+    Edge rows receive zeros (open boundary).  Cross-device rows travel by
+    ppermute along `axis_name` when the grid is sharded.
+    """
+    if direction == +1:
+        local = jnp.concatenate([jnp.zeros_like(x[:1]), x[:-1]], axis=0)
+        boundary = x[-1:]  # my last row is my down-neighbor's halo
+        perm_src_dst = [(i, i + 1) for i in range(n_shards - 1)]
+        recv_into_first = True
+    else:
+        local = jnp.concatenate([x[1:], jnp.zeros_like(x[:1])], axis=0)
+        boundary = x[:1]
+        perm_src_dst = [(i + 1, i) for i in range(n_shards - 1)]
+        recv_into_first = False
+    if axis_name is None or n_shards == 1:
+        return local
+    halo = jax.lax.ppermute(boundary, axis_name, perm_src_dst)
+    if recv_into_first:
+        return local.at[:1].set(halo)
+    return local.at[-1:].set(halo)
+
+
+def _shift_cols(x: jax.Array, direction: int, axis_name: str | None,
+                n_shards: int) -> jax.Array:
+    xt = jnp.swapaxes(x, 0, 1)
+    out = _shift_rows(xt, direction, axis_name, n_shards)
+    return jnp.swapaxes(out, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Physics
+# ---------------------------------------------------------------------------
+def _neuron(I, gain, off, beta, u):
+    """I, u: (B, R, C, k); gain/off broadcast over the chain dim."""
+    return jnp.where(jnp.tanh(beta * gain * (I + off)) + u >= 0.0, 1.0, -1.0)
+
+
+def lattice_half_sweep(
+    state: LatticeState,
+    chip: LatticeChip,
+    color: int,
+    beta: jax.Array,
+    u_v: jax.Array,
+    u_h: jax.Array,
+    parity: jax.Array,          # (R, C) global (r+c) % 2 of each local cell
+    row_axis: str | None, n_row: int,
+    col_axis: str | None, n_col: int,
+) -> LatticeState:
+    # spins are (B, R, C, k): chain-batched; the halo helpers shift the
+    # cell-row/col dims (now dims 1/2), so transpose through them
+    m_v, m_h = state.m_v, state.m_h
+
+    def rows(x, d):   # shift the cell-row dim (axis 1 of (B, R, C, k))
+        return jnp.moveaxis(
+            _shift_rows(jnp.moveaxis(x, 1, 0), d, row_axis, n_row), 0, 1)
+
+    def cols(x, d):   # shift the cell-col dim (axis 2 of (B, R, C, k))
+        return jnp.moveaxis(
+            _shift_rows(jnp.moveaxis(x, 2, 0), d, col_axis, n_col), 0, 2)
+
+    # -- vertical nodes of parity==color cells -------------------------
+    mv_up = rows(m_v, +1)                            # spin of (r-1, c)
+    wv_up = _shift_rows(chip.Wv_dn, +1, row_axis, n_row)  # its coupler
+    I_v = (
+        jnp.einsum("rcij,brcj->brci", chip.W_vh, m_h)
+        + wv_up * mv_up
+        + chip.Wv_up * rows(m_v, -1)
+        + chip.h_v
+    )
+    new_v = _neuron(I_v, chip.gain_v, chip.off_v, beta, u_v)
+    upd_v = (parity == color)[..., None]
+    m_v = jnp.where(upd_v, new_v, m_v).astype(m_v.dtype)
+
+    # -- horizontal nodes of parity==(1-color) cells --------------------
+    mh_lt = cols(m_h, +1)
+    wh_lt = _shift_cols(chip.Wh_rt, +1, col_axis, n_col)
+    I_h = (
+        jnp.einsum("rcij,brcj->brci", chip.W_hv, m_v)
+        + wh_lt * mh_lt
+        + chip.Wh_lt * cols(m_h, -1)
+        + chip.h_h
+    )
+    new_h = _neuron(I_h, chip.gain_h, chip.off_h, beta, u_h)
+    upd_h = (parity == (1 - color))[..., None]
+    m_h = jnp.where(upd_h, new_h, m_h).astype(m_h.dtype)
+    return LatticeState(m_v, m_h)
+
+
+def lattice_energy(state: LatticeState, chip: LatticeChip,
+                   row_axis: str | None, n_row: int,
+                   col_axis: str | None, n_col: int) -> jax.Array:
+    """Global Ising energy (symmetrized couplings), psum over the mesh."""
+    W_sym = 0.5 * (chip.W_vh + jnp.swapaxes(chip.W_hv, -1, -2))
+    e_cell = -jnp.einsum("brci,rcij,brcj->b", state.m_v, W_sym, state.m_h)
+    wv = 0.5 * (chip.Wv_dn + chip.Wv_up)
+    mv_dn = jnp.moveaxis(
+        _shift_rows(jnp.moveaxis(state.m_v, 1, 0), -1, row_axis, n_row),
+        0, 1)
+    e_vert = -jnp.sum(wv * state.m_v * mv_dn, axis=(1, 2, 3))
+    wh = 0.5 * (chip.Wh_rt + chip.Wh_lt)
+    mh_rt = jnp.moveaxis(
+        _shift_rows(jnp.moveaxis(state.m_h, 2, 0), -1, col_axis, n_col),
+        0, 2)
+    e_horiz = -jnp.sum(wh * state.m_h * mh_rt, axis=(1, 2, 3))
+    e_bias = -jnp.sum(chip.h_v * state.m_v, axis=(1, 2, 3)) - \
+        jnp.sum(chip.h_h * state.m_h, axis=(1, 2, 3))
+    e = e_cell + e_vert + e_horiz + e_bias
+    if row_axis is not None:
+        e = jax.lax.psum(e, row_axis)
+    if col_axis is not None:
+        e = jax.lax.psum(e, col_axis)
+    return e
+
+
+def make_lattice_anneal(
+    spec: LatticeSpec,
+    mesh: Mesh | None,
+    *,
+    row_axes: tuple[str, ...] = ("data",),
+    col_axes: tuple[str, ...] = ("model",),
+    n_sweeps: int = 100,
+    record_every: int = 10,
+):
+    """Build the (optionally shard_map-distributed) annealing step.
+
+    Returns fn(chip_sharded, key, betas) -> (final_state, energies).
+    With mesh=None runs single-device (used by unit tests).
+    """
+    R, C = spec.cell_rows, spec.cell_cols
+
+    if mesh is not None:
+        row_axis = row_axes[0] if len(row_axes) == 1 else row_axes
+        col_axis = col_axes[0] if len(col_axes) == 1 else col_axes
+        n_row = int(np.prod([mesh.shape[a] for a in row_axes]))
+        n_col = int(np.prod([mesh.shape[a] for a in col_axes]))
+    else:
+        row_axis = col_axis = None
+        n_row = n_col = 1
+    tr, tc = R // n_row, C // n_col
+
+    def local_run(chip: LatticeChip, key: jax.Array, betas: jax.Array):
+        if row_axis is not None:
+            ri = jax.lax.axis_index(row_axis)
+            ci = jax.lax.axis_index(col_axis)
+        else:
+            ri = ci = 0
+        key = jax.random.fold_in(key, ri * 65536 + ci)
+        gr = ri * tr + jnp.arange(tr)[:, None]
+        gc = ci * tc + jnp.arange(tc)[None, :]
+        parity = (gr + gc) % 2
+
+        k0, k1 = jax.random.split(key)
+        B = spec.chains
+        m_v = jnp.where(
+            jax.random.bernoulli(k0, 0.5, (B, tr, tc, spec.k)), 1.0, -1.0)
+        m_h = jnp.where(
+            jax.random.bernoulli(k1, 0.5, (B, tr, tc, spec.k)), 1.0, -1.0)
+        state = LatticeState(m_v.astype(jnp.float32),
+                             m_h.astype(jnp.float32))
+
+        def sweep(carry, inp):
+            st, k = carry
+            beta, rec = inp
+            for color in (0, 1):
+                k, ku = jax.random.split(k)
+                us = jax.random.uniform(ku, (2, B, tr, tc, spec.k),
+                                        minval=-1.0, maxval=1.0)
+                st = lattice_half_sweep(
+                    st, chip, color, beta, us[0], us[1], parity,
+                    row_axis, n_row, col_axis, n_col)
+            e = jnp.where(
+                rec,
+                lattice_energy(st, chip, row_axis, n_row, col_axis,
+                               n_col).mean(),
+                0.0)
+            return (st, k), e
+
+        rec = (jnp.arange(n_sweeps) % record_every) == record_every - 1
+        (state, _), energies = jax.lax.scan(sweep, (state, key),
+                                            (betas, rec))
+        return state, energies
+
+    if mesh is None:
+        return jax.jit(local_run)
+
+    chip_specs = LatticeChip(
+        *[P(row_axes, col_axes) for _ in range(12)])
+    out_specs = (LatticeState(P(row_axes, col_axes), P(row_axes, col_axes)),
+                 P())
+    fn = jax.shard_map(
+        local_run, mesh=mesh,
+        in_specs=(chip_specs, P(), P()),
+        out_specs=out_specs,
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def lattice_input_sharding(mesh: Mesh, row_axes=("data",),
+                           col_axes=("model",)):
+    return NamedSharding(mesh, P(row_axes, col_axes))

@@ -1,0 +1,222 @@
+"""Analog hardware model of the chip's non-idealities.
+
+The paper's area-efficiency choices (standard-cell analog pitch-matched to
+digital, shared 1 V supply, MOS R-2R DACs with no output-resistance
+enhancement, un-matched current mirrors) buy density at the cost of
+process-variation mismatch.  This module is the physics model of those
+non-idealities; `program_weights` compiles digital 8-bit weights through it
+into the *effective* analog quantities the sampler sees.
+
+Modeled effects (all per chip *instance*, sampled from a PRNG key):
+  * R-2R DAC per-bit branch mismatch       -> nonmonotonic INL/DNL in J & h
+  * DAC output-resistance / supply droop   -> soft compression of large currents
+  * Gilbert-multiplier gain error per edge *direction* -> asymmetric W[i,j] != W[j,i]
+  * disabled-coupler leakage (enable bit leaks a small current)
+  * WTA-tanh gain (beta) variation and input offset per node
+  * RNG-DAC amplitude mismatch per node
+  * comparator input offset per node
+
+Setting ``HardwareConfig.ideal()`` zeroes every sigma, giving a bit-exact
+textbook p-bit (used as the oracle in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chimera import ChimeraGraph
+
+WMIN, WMAX = -128, 127  # 8-bit signed DAC codes
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConfig:
+    """Process-variation sigmas (fraction of nominal unless noted)."""
+
+    sigma_dac_bit: float = 0.04      # per-R-2R-branch current mismatch
+    sigma_edge_gain: float = 0.05    # Gilbert multiplier gain, per direction
+    sigma_tanh_gain: float = 0.08    # WTA tanh beta spread per node
+    sigma_tanh_offset: float = 2.0   # input-referred offset, LSB units
+    sigma_rand_gain: float = 0.05    # RNG DAC amplitude spread per node
+    sigma_comp_offset: float = 0.02  # comparator offset, fraction of FS
+    leak_frac: float = 0.004         # disabled-coupler leakage, fraction of FS
+    compression: float = 3e-3        # soft saturation: I/(1+compression*|I|/FS)
+
+    @staticmethod
+    def ideal() -> "HardwareConfig":
+        return HardwareConfig(0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+
+    def is_ideal(self) -> bool:
+        return all(
+            getattr(self, f.name) == 0.0 for f in dataclasses.fields(self)
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Mismatch:
+    """Sampled per-instance variation (a pytree of arrays)."""
+
+    dac_bit_j: jax.Array      # (N, N, 8) per-bit branch error for J DACs
+    dac_bit_h: jax.Array      # (N, 8)
+    edge_gain: jax.Array      # (N, N) directional multiplier gain error
+    tanh_gain: jax.Array      # (N,)   multiplicative beta error
+    tanh_offset: jax.Array    # (N,)   additive input offset (weight LSB units)
+    rand_gain: jax.Array      # (N,)
+    comp_offset: jax.Array    # (N,)
+    leak: jax.Array           # (N, N) leakage of disabled couplers
+
+    def tree_flatten(self):
+        fields = dataclasses.fields(self)
+        return tuple(getattr(self, f.name) for f in fields), None
+
+    @classmethod
+    def tree_unflatten(cls, aux: Any, children):
+        return cls(*children)
+
+
+def sample_mismatch(
+    key: jax.Array, n_nodes: int, cfg: HardwareConfig
+) -> Mismatch:
+    """Draw one chip instance's process variation."""
+    ks = jax.random.split(key, 8)
+    n = n_nodes
+
+    def g(k, shape, sigma):
+        if sigma == 0.0:
+            return jnp.zeros(shape, dtype=jnp.float32)
+        return sigma * jax.random.normal(k, shape, dtype=jnp.float32)
+
+    return Mismatch(
+        dac_bit_j=g(ks[0], (n, n, 8), cfg.sigma_dac_bit),
+        dac_bit_h=g(ks[1], (n, 8), cfg.sigma_dac_bit),
+        edge_gain=g(ks[2], (n, n), cfg.sigma_edge_gain),
+        tanh_gain=g(ks[3], (n,), cfg.sigma_tanh_gain),
+        tanh_offset=g(ks[4], (n,), cfg.sigma_tanh_offset),
+        rand_gain=g(ks[5], (n,), cfg.sigma_rand_gain),
+        comp_offset=g(ks[6], (n,), cfg.sigma_comp_offset),
+        leak=jnp.abs(g(ks[7], (n, n), cfg.leak_frac)),
+    )
+
+
+def _bits(w_mag: jax.Array) -> jax.Array:
+    """Binary expansion of |code| in [0, 128]. Returns float (..., 8)."""
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    return ((w_mag[..., None].astype(jnp.int32) >> shifts) & 1).astype(
+        jnp.float32
+    )
+
+
+def dac_transfer(code: jax.Array, bit_err: jax.Array) -> jax.Array:
+    """R-2R DAC: signed 8-bit code -> analog current (weight-LSB units).
+
+    Sign-magnitude current steering with per-branch mismatch:
+      I = sign(code) * sum_b bit_b(|code|) * 2^b * (1 + eps_b)
+    """
+    sign = jnp.sign(code.astype(jnp.float32))
+    mag = jnp.abs(code.astype(jnp.int32))
+    weights = (2.0 ** jnp.arange(8, dtype=jnp.float32)) * (1.0 + bit_err)
+    return sign * jnp.sum(_bits(mag) * weights, axis=-1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EffectiveChip:
+    """Digital weights compiled through the analog model — what physics sees.
+
+    W is *directional*: W[i, j] is the current injected into node i per unit
+    spin m_j (the shared-edge DAC value times node-i's multiplier gain), so
+    in general W != W.T under mismatch, exactly as on silicon.
+    """
+
+    W: jax.Array            # (N, N) effective couplings, weight-LSB units
+    h: jax.Array            # (N,)  effective biases
+    tanh_gain: jax.Array    # (N,)  multiplicative on beta
+    tanh_offset: jax.Array  # (N,)  additive current offset
+    rand_gain: jax.Array    # (N,)
+    comp_offset: jax.Array  # (N,)
+
+    def tree_flatten(self):
+        fields = dataclasses.fields(self)
+        return tuple(getattr(self, f.name) for f in fields), None
+
+    @classmethod
+    def tree_unflatten(cls, aux: Any, children):
+        return cls(*children)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.W.shape[-1]
+
+
+def program_weights(
+    J: jax.Array,
+    h: jax.Array,
+    enable: jax.Array,
+    mism: Mismatch,
+    cfg: HardwareConfig,
+    adjacency: jax.Array | None = None,
+) -> EffectiveChip:
+    """Compile digital (int8) weights into effective analog quantities.
+
+    J: (N, N) symmetric int8 codes; h: (N,) int8 codes;
+    enable: (N, N) bool coupler-enable bits; adjacency: (N, N) bool physical
+    couplers (no current path at all where False).
+    """
+    J = jnp.asarray(J)
+    n = J.shape[0]
+    Wdac = dac_transfer(J, mism.dac_bit_j)           # shared per-edge DAC
+    Wdir = Wdac * (1.0 + mism.edge_gain)             # per-direction multiplier
+    # enable bit: disabled couplers leak a small fraction of full scale
+    Wdir = jnp.where(enable, Wdir, jnp.sign(Wdir) * mism.leak * 128.0)
+    if adjacency is not None:
+        Wdir = jnp.where(adjacency, Wdir, 0.0)
+    Wdir = Wdir * (1.0 - jnp.eye(n, dtype=Wdir.dtype))  # no self coupling
+    # soft compression from finite DAC output resistance / supply droop
+    if cfg.compression > 0.0:
+        Wdir = Wdir / (1.0 + cfg.compression * jnp.abs(Wdir))
+    h_eff = dac_transfer(h, mism.dac_bit_h)
+    return EffectiveChip(
+        W=Wdir.astype(jnp.float32),
+        h=h_eff.astype(jnp.float32),
+        tanh_gain=1.0 + mism.tanh_gain,
+        tanh_offset=mism.tanh_offset,
+        rand_gain=1.0 + mism.rand_gain,
+        comp_offset=mism.comp_offset,
+    )
+
+
+def ideal_chip(J: jax.Array, h: jax.Array,
+               adjacency: jax.Array | None = None) -> EffectiveChip:
+    """Zero-mismatch chip from float or int weights (the textbook p-bit)."""
+    J = jnp.asarray(J, dtype=jnp.float32)
+    n = J.shape[0]
+    W = J * (1.0 - jnp.eye(n, dtype=jnp.float32))
+    if adjacency is not None:
+        W = jnp.where(adjacency, W, 0.0)
+    ones = jnp.ones((n,), dtype=jnp.float32)
+    return EffectiveChip(
+        W=W,
+        h=jnp.asarray(h, dtype=jnp.float32),
+        tanh_gain=ones,
+        tanh_offset=0.0 * ones,
+        rand_gain=ones,
+        comp_offset=0.0 * ones,
+    )
+
+
+def measure_node_transfer(
+    chip_sampler,
+    bias_codes: np.ndarray,
+    **kw,
+) -> np.ndarray:
+    """Paper Fig. 8a: sweep the bias DAC and record <m> per node.
+
+    `chip_sampler(bias_code) -> mean_spin[N]` is provided by callers; kept
+    here for discoverability.  See benchmarks/bench_variability.py.
+    """
+    return np.stack([np.asarray(chip_sampler(b, **kw)) for b in bias_codes])

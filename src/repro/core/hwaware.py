@@ -1,0 +1,76 @@
+"""Generalized hardware-aware learning for arbitrary JAX models.
+
+The paper's insight — put the hardware's quantization + analog mismatch *in
+the training forward path* so learning absorbs it — generalizes beyond Ising
+lattices.  This module provides a straight-through-estimator (STE) transform
+that fake-quantizes selected weight matrices to signed 8-bit "DAC codes"
+with per-output-channel gain mismatch (the same R-2R + multiplier model as
+`core/hardware.py`, at tensor granularity), for use inside any `train_step`
+(`--hardware-aware` in launch/train.py; available to all 10 assigned archs —
+see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class HwAwareConfig:
+    bits: int = 8
+    sigma_gain: float = 0.03      # per-output-channel analog gain mismatch
+    sigma_bit: float = 0.0        # optional per-bit DNL (0 = plain quant)
+    min_ndim: int = 2             # only quantize matrices/tensors, not norms
+    min_size: int = 4096          # skip tiny params (biases, scales)
+
+
+def _fake_quant(w: jax.Array, bits: int) -> jax.Array:
+    """Symmetric per-tensor fake quantization with STE."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / qmax
+    q = jnp.round(w / scale) * scale
+    return w + jax.lax.stop_gradient(q - w)  # STE
+
+
+def _channel_gain(path_hash: int, shape: tuple[int, ...],
+                  sigma: float, key: jax.Array) -> jax.Array:
+    """Frozen per-channel gain for one chip instance (derived from key+path)."""
+    k = jax.random.fold_in(key, path_hash)
+    g = 1.0 + sigma * jax.random.normal(k, (shape[-1],), dtype=jnp.float32)
+    return g
+
+
+def _should_quantize(path: str, w: Any, cfg: HwAwareConfig) -> bool:
+    if not isinstance(w, jax.Array) and not hasattr(w, "shape"):
+        return False
+    if w.ndim < cfg.min_ndim or w.size < cfg.min_size:
+        return False
+    if "embed" in path:  # embeddings stay high precision (chip analogy: SPI)
+        return False
+    return jnp.issubdtype(w.dtype, jnp.floating)
+
+
+def apply_hardware(params: Any, cfg: HwAwareConfig,
+                   chip_key: jax.Array) -> Any:
+    """Map params -> "as seen by the hardware" params (differentiable, STE).
+
+    chip_key fixes the mismatch instance: the same key across all training
+    steps models one physical chip, exactly like the paper's in-situ setup.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves, treedef = flat
+    out = []
+    for path, w in leaves:
+        pstr = jax.tree_util.keystr(path)
+        if _should_quantize(pstr, w, cfg):
+            wq = _fake_quant(w.astype(jnp.float32), cfg.bits)
+            gain = _channel_gain(hash(pstr) & 0x7FFFFFFF, w.shape,
+                                 cfg.sigma_gain, chip_key)
+            wq = (wq * gain).astype(w.dtype)
+            out.append(wq)
+        else:
+            out.append(w)
+    return jax.tree_util.tree_unflatten(treedef, out)

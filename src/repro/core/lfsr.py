@@ -1,0 +1,104 @@
+"""LFSR random number generation, faithful to the chip.
+
+The chip drives each Chimera unit cell with a 32-bit LFSR (clocked from 64
+decimated random clocks derived from two 200 MHz LFSRs).  Each 32-bit LFSR
+exposes only 4 unique bytes per cycle; the four *vertical* nodes of a cell
+consume the bytes in normal bit order while the four *horizontal* nodes
+consume the bit-reversed bytes (the paper's area-saving trick; measured to
+cause no performance degradation — we test that claim in
+tests/test_lfsr.py::test_reversed_byte_correlation).
+
+We implement a Galois LFSR over uint32 with the maximal-length polynomial
+x^32 + x^22 + x^2 + x + 1 (mask 0x80200003).  All ops vectorize over an
+arbitrary leading shape of independent LFSR states, so (chains, cells) runs
+as one fused update on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GALOIS_MASK_32 = np.uint32(0x80200003)  # x^32 + x^22 + x^2 + x + 1
+_BYTE_REV = np.array(
+    [int(f"{b:08b}"[::-1], 2) for b in range(256)], dtype=np.uint32
+)
+
+
+def seed_states(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Nonzero uint32 LFSR states of the given shape."""
+    bits = jax.random.bits(key, shape, dtype=jnp.uint32)
+    return jnp.where(bits == 0, jnp.uint32(0xDEADBEEF), bits)
+
+
+def lfsr_step(state: jax.Array) -> jax.Array:
+    """One Galois LFSR clock. state: uint32[...]"""
+    lsb = state & jnp.uint32(1)
+    shifted = state >> jnp.uint32(1)
+    return jnp.where(lsb == 1, shifted ^ GALOIS_MASK_32, shifted)
+
+
+def lfsr_step_n(state: jax.Array, n: int) -> jax.Array:
+    """Advance every state by ``n`` clocks (unrolled; n is small/static)."""
+    for _ in range(n):
+        state = lfsr_step(state)
+    return state
+
+
+def cell_bytes(state: jax.Array) -> jax.Array:
+    """Extract the 4 bytes of each 32-bit state. uint32[...] -> uint32[..., 4]."""
+    shifts = jnp.array([0, 8, 16, 24], dtype=jnp.uint32)
+    return (state[..., None] >> shifts) & jnp.uint32(0xFF)
+
+
+def reverse_bytes_bits(b: jax.Array) -> jax.Array:
+    """Bit-reverse each byte (uint32 values in [0,256))."""
+    table = jnp.asarray(_BYTE_REV)
+    return table[b]
+
+
+def byte_to_uniform(b: jax.Array) -> jax.Array:
+    """Map a byte to a mid-tread uniform in (-1, 1), as the 8-bit RNG DAC does."""
+    return (b.astype(jnp.float32) - 127.5) / 128.0
+
+
+def cell_uniforms(state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-cell uniforms for (vertical[..., 4], horizontal[..., 4]) nodes."""
+    by = cell_bytes(state)
+    return byte_to_uniform(by), byte_to_uniform(reverse_bytes_bits(by))
+
+
+def next_uniforms(state: jax.Array, decimation: int = 8
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Advance states ``decimation`` clocks and emit fresh cell uniforms.
+
+    Returns (new_state, vert_u[..., 4], horiz_u[..., 4]).  The chip refreshes
+    one byte-worth of entropy per sample (decimated clocking); decimation=8
+    reproduces that.
+    """
+    state = lfsr_step_n(state, decimation)
+    v, h = cell_uniforms(state)
+    return state, v, h
+
+
+def lfsr_uniform_for_graph(
+    state: jax.Array,
+    vert_scatter: jax.Array,
+    horiz_scatter: jax.Array,
+    n_nodes: int,
+    decimation: int = 8,
+) -> tuple[jax.Array, jax.Array]:
+    """Produce per-node uniforms for a Chimera graph.
+
+    state: uint32[..., n_cells]; *_scatter: int32[n_cells, 4] node ids
+    (vertical / horizontal nodes of each cell, compacted numbering).
+    Returns (new_state, u[..., n_nodes]).
+    """
+    state, v, h = next_uniforms(state, decimation)
+    batch = state.shape[:-1]
+    u = jnp.zeros(batch + (n_nodes,), dtype=jnp.float32)
+    u = u.at[..., vert_scatter.reshape(-1)].set(
+        v.reshape(batch + (-1,)))
+    u = u.at[..., horiz_scatter.reshape(-1)].set(
+        h.reshape(batch + (-1,)))
+    return state, u

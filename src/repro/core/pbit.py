@@ -1,0 +1,219 @@
+"""The p-bit sampling engine (paper eqns 1 & 2), vectorized + batched.
+
+Eqn 1:  I_i = sum_{j != i} J_ij m_j + h_i        (current summation)
+Eqn 2:  m_i = sgn( tanh(beta I_i) + U(-1, +1) )  (stochastic neuron)
+
+(The paper's eqn 1 prints "h_i m_i"; the standard p-bit bias term — and the
+chip's bias-DAC current path, which does not multiply by m_i — is "+ h_i".
+We implement "+ h_i" and note the typo here.)
+
+On silicon all 440 neurons update asynchronously in parallel.  The exact
+digital emulation for a 2-colorable graph (Chimera is — see chimera.py) is
+*chromatic Gibbs*: update color class 0 in parallel, then class 1, each with
+fresh noise.  Each half-sweep is one (B, N) x (N, N) matmul — MXU food.
+
+`half_sweep` runs through an `EffectiveChip` (hardware.py) so every analog
+non-ideality is in the loop; with `HardwareConfig.ideal()` it reduces to the
+textbook equations, which tests/test_pbit.py verifies against exact
+enumeration of the Boltzmann distribution.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lfsr as lfsr_mod
+from repro.core.chimera import ChimeraGraph
+from repro.core.hardware import EffectiveChip
+
+NoiseFn = Callable[[jax.Array], tuple[jax.Array, jax.Array]]
+
+
+# ---------------------------------------------------------------------------
+# Noise sources
+# ---------------------------------------------------------------------------
+def make_philox_noise(batch: int, n_nodes: int, quantize: bool = True
+                      ) -> NoiseFn:
+    """Counter-based noise (scale mode): state is a PRNG key."""
+
+    def step(key: jax.Array) -> tuple[jax.Array, jax.Array]:
+        key, sub = jax.random.split(key)
+        if quantize:  # mimic the 8-bit RNG DAC's discrete levels
+            b = jax.random.randint(sub, (batch, n_nodes), 0, 256)
+            u = (b.astype(jnp.float32) - 127.5) / 128.0
+        else:
+            u = jax.random.uniform(
+                sub, (batch, n_nodes), minval=-1.0, maxval=1.0)
+        return key, u
+
+    return step
+
+
+def make_lfsr_noise(graph: ChimeraGraph, batch: int, decimation: int = 8
+                    ) -> tuple[Callable[[jax.Array], jax.Array], NoiseFn]:
+    """Chip-faithful noise: one 32-bit LFSR per unit cell.
+
+    Returns (init_fn(key) -> state, step_fn(state) -> (state, u[batch, N])).
+    Vertical nodes read the register bytes; horizontal nodes read the
+    bit-reversed bytes (paper's sharing trick).
+    """
+    cells = sorted(
+        {(int(r), int(c)) for r, c in zip(graph.node_r, graph.node_c)}
+    )
+    vert = np.stack([graph.cell_nodes(r, c, side=0) for r, c in cells])
+    horiz = np.stack([graph.cell_nodes(r, c, side=1) for r, c in cells])
+    vert_j = jnp.asarray(vert)
+    horiz_j = jnp.asarray(horiz)
+    n_cells = len(cells)
+
+    def init(key: jax.Array) -> jax.Array:
+        return lfsr_mod.seed_states(key, (batch, n_cells))
+
+    def step(state: jax.Array) -> tuple[jax.Array, jax.Array]:
+        return lfsr_mod.lfsr_uniform_for_graph(
+            state, vert_j, horiz_j, graph.n_nodes, decimation)
+
+    return init, step
+
+
+# ---------------------------------------------------------------------------
+# Core update
+# ---------------------------------------------------------------------------
+def neuron_input(m: jax.Array, chip: EffectiveChip) -> jax.Array:
+    """Eqn 1 for every node: I = m @ W^T + h.  m: (B, N) in {-1, +1}."""
+    return m @ chip.W.T + chip.h
+
+
+def half_sweep(
+    m: jax.Array,
+    chip: EffectiveChip,
+    update_mask: jax.Array,
+    beta: jax.Array,
+    u: jax.Array,
+) -> jax.Array:
+    """Parallel update of the nodes selected by ``update_mask`` (eqn 2)."""
+    I = neuron_input(m, chip)
+    act = jnp.tanh(beta * chip.tanh_gain * (I + chip.tanh_offset))
+    decision = act + chip.rand_gain * u + chip.comp_offset
+    new = jnp.where(decision >= 0.0, 1.0, -1.0).astype(m.dtype)
+    return jnp.where(update_mask, new, m)
+
+
+class SweepCarry(NamedTuple):
+    m: jax.Array
+    noise_state: jax.Array
+
+
+def make_sweep_fn(
+    chip: EffectiveChip,
+    color: jax.Array,
+    noise_fn: NoiseFn,
+    clamp_mask: jax.Array | None = None,
+    clamp_values: jax.Array | None = None,
+    kernel: Callable | None = None,
+):
+    """Build one full Gibbs sweep (two chromatic half-sweeps).
+
+    clamp_mask: (N,) bool — nodes held at clamp_values (B, N) (CD positive
+    phase).  `kernel`, if given, replaces the jnp half-sweep with the Pallas
+    fused implementation (same signature, see kernels/ops.py).
+    """
+    hs = kernel if kernel is not None else half_sweep
+    masks = [(color == c) for c in (0, 1)]
+    if clamp_mask is not None:
+        masks = [mk & (~clamp_mask) for mk in masks]
+
+    def sweep(carry: SweepCarry, beta: jax.Array) -> SweepCarry:
+        m, ns = carry.m, carry.noise_state
+        if clamp_values is not None:
+            m = jnp.where(clamp_mask, clamp_values, m)
+        for mk in masks:
+            ns, u = noise_fn(ns)
+            m = hs(m, chip, mk, beta, u)
+        return SweepCarry(m, ns)
+
+    return sweep
+
+
+def gibbs_sample(
+    chip: EffectiveChip,
+    color: jax.Array,
+    init_m: jax.Array,
+    betas: jax.Array,
+    noise_state: jax.Array,
+    noise_fn: NoiseFn,
+    clamp_mask: jax.Array | None = None,
+    clamp_values: jax.Array | None = None,
+    collect: bool = False,
+    kernel: Callable | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """Run len(betas) sweeps.  Returns (final_m, noise_state, traj|None).
+
+    traj (if collect): (n_sweeps, B, N) spin states after every sweep.
+    """
+    sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
+                          kernel)
+
+    def body(carry, beta):
+        nxt = sweep(carry, beta)
+        return nxt, (nxt.m if collect else None)
+
+    (final, traj) = jax.lax.scan(
+        body, SweepCarry(init_m, noise_state), betas)
+    return final.m, final.noise_state, traj
+
+
+def gibbs_stats(
+    chip: EffectiveChip,
+    color: jax.Array,
+    init_m: jax.Array,
+    beta: float,
+    n_sweeps: int,
+    burn_in: int,
+    noise_state: jax.Array,
+    noise_fn: NoiseFn,
+    edges: jax.Array,
+    clamp_mask: jax.Array | None = None,
+    clamp_values: jax.Array | None = None,
+    kernel: Callable | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Accumulate first/second moments on-line (no trajectory storage).
+
+    Returns (mean_spin[N], mean_edge_corr[E], final_m, noise_state), with
+    moments averaged over chains and post-burn-in sweeps — exactly the
+    statistics contrastive divergence needs.
+    """
+    sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
+                          kernel)
+    e0, e1 = edges[:, 0], edges[:, 1]
+    betas = jnp.full((n_sweeps,), beta, dtype=jnp.float32)
+
+    def body(carry, inp):
+        state, s_sum, c_sum = carry
+        beta_t, is_measured = inp
+        state = sweep(state, beta_t)
+        w = is_measured.astype(jnp.float32)
+        s_sum = s_sum + w * state.m.mean(axis=0)
+        corr = (state.m[:, e0] * state.m[:, e1]).mean(axis=0)
+        c_sum = c_sum + w * corr
+        return (state, s_sum, c_sum), None
+
+    measured = (jnp.arange(n_sweeps) >= burn_in)
+    init = (
+        SweepCarry(init_m, noise_state),
+        jnp.zeros((init_m.shape[1],), jnp.float32),
+        jnp.zeros((edges.shape[0],), jnp.float32),
+    )
+    (state, s_sum, c_sum), _ = jax.lax.scan(body, init, (betas, measured))
+    denom = jnp.maximum(n_sweeps - burn_in, 1).astype(jnp.float32)
+    return s_sum / denom, c_sum / denom, state.m, state.noise_state
+
+
+def random_spins(key: jax.Array, batch: int, n_nodes: int) -> jax.Array:
+    return jnp.where(
+        jax.random.bernoulli(key, 0.5, (batch, n_nodes)), 1.0, -1.0
+    ).astype(jnp.float32)

@@ -1,0 +1,44 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+`make_kernel_half_sweep` adapts the fused kernel to the sampler's
+`half_sweep(m, chip, update_mask, beta, u)` signature (see core/pbit.py) so
+the whole CD / annealing stack can run through Pallas with one flag.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.core.hardware import EffectiveChip
+from repro.kernels.pbit_update import pbit_half_sweep_pallas
+from repro.kernels.ref import pbit_half_sweep_ref
+
+
+def default_interpret() -> bool:
+    """interpret=True unless we are actually on TPU."""
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return os.environ["REPRO_PALLAS_INTERPRET"] == "1"
+    return jax.default_backend() != "tpu"
+
+
+def make_kernel_half_sweep(block_b: int = 128, block_n: int = 128,
+                           block_k: int = 512,
+                           interpret: bool | None = None):
+    interp = default_interpret() if interpret is None else interpret
+
+    def half_sweep(m, chip: EffectiveChip, update_mask, beta, u):
+        return pbit_half_sweep_pallas(
+            m, chip.W, chip.h, chip.tanh_gain, chip.tanh_offset,
+            chip.rand_gain, chip.comp_offset, update_mask, beta, u,
+            block_b=block_b, block_n=block_n, block_k=block_k,
+            interpret=interp)
+
+    return half_sweep
+
+
+def ref_half_sweep(m, chip: EffectiveChip, update_mask, beta, u):
+    return pbit_half_sweep_ref(
+        m, chip.W, chip.h, chip.tanh_gain, chip.tanh_offset,
+        chip.rand_gain, chip.comp_offset, update_mask, beta, u)

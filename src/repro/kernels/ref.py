@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pbit_half_sweep_ref(m, W, h, gain, off, rand_gain, comp_off,
+                        update_mask, beta, u):
+    """Fused chromatic-Gibbs half-sweep, reference semantics.
+
+    m: (B, N) spins in {-1, +1};  W: (N, N) directional couplings
+    (I_i = sum_j W[i, j] m_j);  h/gain/off/rand_gain/comp_off: (N,);
+    update_mask: (N,) bool;  beta: scalar;  u: (B, N) uniform noise.
+    """
+    I = m @ W.T + h
+    act = jnp.tanh(beta * gain * (I + off))
+    decision = act + rand_gain * u + comp_off
+    new = jnp.where(decision >= 0.0, 1.0, -1.0).astype(m.dtype)
+    return jnp.where(update_mask, new, m)
+
+
+def lattice_vertical_update_ref(m_v, m_h, m_v_up, m_v_dn, W_vh, wv_up,
+                                wv_dnin, h, gain, u, parity, color):
+    """Oracle for kernels/lattice_update.py (pure jnp)."""
+    I = (jnp.einsum("rcij,brcj->brci", W_vh, m_h)
+         + wv_dnin * m_v_up + wv_up * m_v_dn + h)
+    act = jnp.tanh(gain * I)
+    new = jnp.where(act + u >= 0.0, 1.0, -1.0)
+    upd = (parity == color)[None, :, :, None]
+    return jnp.where(upd, new, m_v).astype(m_v.dtype)

@@ -1,0 +1,42 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the "pod"
+axis carries only data parallelism (gradient all-reduce over DCI/optical),
+"model" stays intra-pod where ICI bandwidth lives.
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+# TPU v5e hardware constants (roofline + napkin math)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per axis neighbor)
+HBM_BYTES = 16 * 2**30          # 16 GiB per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (possibly fake) local devices exist."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def n_chips(mesh: Mesh) -> int:
+    out = 1
+    for v in mesh.shape.values():
+        out *= v
+    return out

@@ -1,0 +1,255 @@
+"""Step functions + sharding wiring shared by dryrun.py / train.py / serve.py.
+
+`make_train_step(cfg, mesh)` returns (fn, in_shardings, out_shardings,
+abstract_inputs) for a *full* production train step: fwd + bwd + AdamW
+update, remat'd scan, donated state.  `make_serve_step` is the one-token
+decode with donated cache.  `make_prefill_step` fills a cache.
+
+Everything is derived from the logical sharding rules in models/sharding.py;
+nothing here is per-arch special-cased (that is the point — the 40-cell
+dry-run sweep is one code path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelCfg, ShapeCfg
+from repro.core.hwaware import HwAwareConfig
+from repro.models import transformer, whisper
+from repro.models import sharding as shd
+from repro.models.model import (
+    build_model,
+    decode_input_specs,
+    train_input_specs,
+)
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache sharding rules
+# ---------------------------------------------------------------------------
+def batch_specs(batch_tree: Any, mesh: Mesh) -> Any:
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        if "positions" in key and len(leaf.shape) == 3:
+            names = (None, "batch", None)
+        elif "frontend_embeds" in key:
+            names = ("batch", None, None)
+        elif len(leaf.shape) == 2:
+            names = ("batch", None)
+        else:
+            names = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return shd.spec(leaf.shape, names, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_specs(cache_tree: Any, mesh: Mesh) -> Any:
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        nd = len(leaf.shape)
+        lead = (None,) * (nd - _base_ndim(key))
+        if key.endswith("'k']") or key.endswith("'v']"):
+            names = lead + ("batch", "kv_seq", "kv_heads", None)
+        elif "ssm" in key:
+            names = lead + ("batch", "mlp", None)
+        elif "conv" in key:
+            names = lead + ("batch", None, "mlp")
+        elif "wkv" in key:
+            names = lead + ("batch", None, None, None)
+        elif "shift" in key:
+            names = lead + ("batch", None)
+        else:
+            names = (None,) * nd
+        return shd.spec(leaf.shape, names, mesh)
+
+    def _base_ndim(key: str) -> int:
+        if key.endswith("'k']") or key.endswith("'v']"):
+            return 4
+        if "ssm" in key or "conv" in key:
+            return 3
+        if "wkv" in key:
+            return 4
+        if "shift" in key:
+            return 2
+        return 0
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def _ns(mesh, tree_of_specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LoweredStep:
+    fn: Any                    # jitted, sharded
+    abstract_args: tuple       # ShapeDtypeStructs to .lower(*args)
+    in_shardings: Any
+    out_shardings: Any
+
+
+def abstract_train_state(cfg: ModelCfg, state_bits: int = 32
+                         ) -> tuple[Any, Any]:
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    opt = jax.eval_shape(lambda: adamw.init(params, state_bits))
+    return params, opt
+
+
+def _opt_moment_specs(moments: Any, mesh: Mesh) -> Any:
+    """Specs for mu/nu.  f32 moments mirror the param rules; quantized
+    QTensor payloads/scales shard their block dim over the FSDP axis
+    (blockwise layout is shape-agnostic, so any divisible dim0 works)."""
+    quantized = any(
+        getattr(leaf, "dtype", None) == jnp.int8
+        for leaf in jax.tree.leaves(moments))
+
+    def one(path, leaf):
+        if quantized:
+            names = ("opt_blocks",) + (None,) * (len(leaf.shape) - 1)
+            return shd.spec(leaf.shape, names, mesh)
+        key = jax.tree_util.keystr(path)
+        pnames = shd._leaf_axes(key, len(leaf.shape))
+        return shd.spec(leaf.shape, pnames, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, moments)
+
+
+def make_train_step(
+    cfg: ModelCfg,
+    shape: ShapeCfg,
+    mesh: Mesh,
+    opt_cfg: Optional[adamw.AdamWConfig] = None,
+    hw_aware: Optional[HwAwareConfig] = None,
+    microbatches: int = 1,
+) -> LoweredStep:
+    """microbatches > 1: gradient accumulation (scan over batch slices) —
+    divides activation/carry memory by `microbatches` at ~zero FLOP cost."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    model = build_model(cfg, hw_aware=hw_aware)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        with shd.use_mesh(mesh):
+            if microbatches == 1:
+                loss, grads = grads_of(params, batch)
+            else:
+                def split(x):
+                    return x.reshape((microbatches,
+                                      x.shape[0] // microbatches)
+                                     + x.shape[1:])
+                mb = {k: (split(v) if k != "positions" else
+                          jnp.moveaxis(split(jnp.moveaxis(v, 0, 1)), 2, 1))
+                      for k, v in batch.items()}
+
+                def acc_fn(acc, micro):
+                    l, g = grads_of(params, micro)
+                    return jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32),
+                        acc, (l, g)), None
+
+                zero = (jnp.zeros((), jnp.float32),
+                        jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params))
+                (loss, grads), _ = jax.lax.scan(acc_fn, zero, mb)
+                loss, grads = jax.tree.map(
+                    lambda x: x / microbatches, (loss, grads))
+            new_params, new_opt, metrics = adamw.apply(
+                opt_cfg, grads, opt_state, params)
+            metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    params_a, opt_a = abstract_train_state(cfg, opt_cfg.state_bits)
+    batch_a = train_input_specs(cfg, shape)
+    pspec = shd.param_specs(params_a, mesh)
+    ospec = adamw.OptState(
+        step=P(),
+        mu=_opt_moment_specs(opt_a.mu, mesh),
+        nu=_opt_moment_specs(opt_a.nu, mesh))
+    bspec = batch_specs(batch_a, mesh)
+    in_sh = (_ns(mesh, pspec), _ns(mesh, ospec), _ns(mesh, bspec))
+    out_sh = (_ns(mesh, pspec), _ns(mesh, ospec), None)
+    fn = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0, 1))
+    return LoweredStep(fn, (params_a, opt_a, batch_a), in_sh, out_sh)
+
+
+# ---------------------------------------------------------------------------
+# Serve: decode + prefill
+# ---------------------------------------------------------------------------
+def make_serve_step(cfg: ModelCfg, shape: ShapeCfg, mesh: Mesh
+                    ) -> LoweredStep:
+    model = build_model(cfg)
+
+    def serve_step(params, tokens, pos, cache):
+        with shd.use_mesh(mesh):
+            logits, new_cache = model.decode_step(params, tokens, pos, cache)
+        return logits, new_cache
+
+    params_a = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = decode_input_specs(cfg, shape)
+    pspec = shd.param_specs(params_a, mesh)
+    cspec = cache_specs(specs["cache"], mesh)
+    tok_spec = shd.spec(specs["tokens"].shape, ("batch", None), mesh)
+    in_sh = (_ns(mesh, pspec), NamedSharding(mesh, tok_spec),
+             NamedSharding(mesh, P()), _ns(mesh, cspec))
+    out_sh = (NamedSharding(mesh, tok_spec), _ns(mesh, cspec))
+    fn = jax.jit(serve_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(3,))
+    args = (params_a, specs["tokens"], specs["pos"], specs["cache"])
+    return LoweredStep(fn, args, in_sh, out_sh)
+
+
+def make_prefill_step(cfg: ModelCfg, shape: ShapeCfg, mesh: Mesh
+                      ) -> LoweredStep:
+    model = build_model(cfg)
+
+    if cfg.enc_dec is not None:
+        def prefill_step(params, batch):
+            with shd.use_mesh(mesh):
+                logits, _ = whisper.forward(params, cfg, batch["tokens"],
+                                            batch["frontend_embeds"])
+            return logits[:, -1:]
+    else:
+        def prefill_step(params, batch):
+            with shd.use_mesh(mesh):
+                logits, cache = transformer.prefill(
+                    params, cfg, batch["tokens"], batch.get("positions"),
+                    batch.get("frontend_embeds"))
+            return logits, cache
+
+    params_a = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    batch_a = train_input_specs(cfg, shape)
+    batch_a.pop("labels")
+    pspec = shd.param_specs(params_a, mesh)
+    bspec = batch_specs(batch_a, mesh)
+    in_sh = (_ns(mesh, pspec), _ns(mesh, bspec))
+    fn = jax.jit(prefill_step, in_shardings=in_sh)
+    return LoweredStep(fn, (params_a, batch_a), in_sh, None)
+
+
+def make_step(cfg: ModelCfg, shape: ShapeCfg, mesh: Mesh,
+              opt_bits: int = 32, microbatches: int = 1) -> LoweredStep:
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig(state_bits=opt_bits)
+        return make_train_step(cfg, shape, mesh, opt_cfg,
+                               microbatches=microbatches)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, mesh)
+    return make_serve_step(cfg, shape, mesh)

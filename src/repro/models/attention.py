@@ -1,0 +1,272 @@
+"""GQA attention: full / sliding-window, softcap, QKV bias, RoPE / M-RoPE.
+
+Two execution paths:
+  * direct   — materializes (B, H, S, S) scores; used for short sequences.
+  * chunked  — flash-style running-softmax over KV chunks (lax.scan), O(S)
+    memory; used for train_4k and prefill_32k so the dry-run's
+    memory_analysis stays within HBM without a hand-written attention
+    kernel.  FLOPs are identical, so roofline compute terms are unaffected.
+
+Decode path updates the KV cache in place (dynamic_update_slice) and attends
+one query against the full cache — O(S·d) per token, which is what makes
+decode shapes legal even at 32k/512k cache lengths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+from repro.models.layers import (
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    softcap,
+)
+from repro.models import flash as flash_mod
+from repro.models.sharding import constrain
+
+import os
+
+NEG_INF = -2.0e38
+CHUNK_Q = 1024
+CHUNK_KV = 512
+DIRECT_MAX_SEQ = 2048  # direct path above this switches to flash/chunked
+ATTN_IMPL = "flash"    # "flash" (custom-VJP, triangular) | "chunked" (scan)
+# sequence-parallel attention for archs whose head count cannot shard over
+# the model axis (beyond-paper optimization; see EXPERIMENTS.md §Perf)
+SEQ_SHARD_ATTN = os.environ.get("REPRO_SEQ_SHARD_ATTN", "0") == "1"
+
+
+def _want_seq_shard(cfg: ModelCfg) -> bool:
+    if not SEQ_SHARD_ATTN:
+        return False
+    from repro.models.sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    return cfg.num_heads % mesh.shape["model"] != 0
+
+
+def init_attention(key, cfg: ModelCfg, dtype) -> dict:
+    hd = cfg.hd()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads, hd), 0, dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads, hd), 0, dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads, hd), 0, dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads, hd, cfg.d_model), 1, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ModelCfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.rope_kind == "rope":
+        pos2 = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope(q, pos2, cfg.rope_theta)
+        k = apply_rope(k, pos2, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(…, Sq, Sk) additive mask."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    d = q_pos[:, None] - k_pos[None, :]
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _scores(q, k, cfg: ModelCfg, scale):
+    """q: (B, Sq, KV, G, hd)  k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk)."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * scale
+    return softcap(s.astype(jnp.float32), cfg.attn_softcap)
+
+
+def _attend_direct(q, k, v, cfg, scale, q_pos, k_pos, causal, window):
+    B, Sq, H, hd = q.shape
+    KV = cfg.num_kv_heads
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = _scores(qg, k, cfg, scale)
+    s = s + _mask_bias(q_pos, k_pos, causal, window)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def _attend_chunked(q, k, v, cfg, scale, q_pos, k_pos, causal, window):
+    """Flash-style: scan over KV chunks with running (max, denom, acc)."""
+    B, Sq, H, hd = q.shape
+    KV = cfg.num_kv_heads
+    G = H // KV
+    Sk = k.shape[1]
+    ck = min(CHUNK_KV, Sk)
+    n_chunks = Sk // ck
+    assert Sk % ck == 0, (Sk, ck)
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    ks = k.reshape(B, n_chunks, ck, KV, hd)
+    vs = v.reshape(B, n_chunks, ck, KV, hd)
+    kpos = k_pos.reshape(n_chunks, ck)
+
+    @jax.checkpoint  # recompute chunk scores in backward: O(chunk) residuals
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        k_c, v_c, kp = inp                       # (B, ck, KV, hd), (ck,)
+        s = _scores(qg, k_c, cfg, scale)         # (B, KV, G, Sq, ck) f32
+        s = s + _mask_bias(q_pos, kp, causal, window)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])        # (B, KV, G, Sq, ck)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v_c.dtype), v_c)
+        acc = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32),
+        jnp.zeros((B, KV, G, Sq), jnp.float32),
+        jnp.zeros((B, KV, G, Sq, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), kpos))
+    o = acc / jnp.maximum(l, 1e-37)[..., None]
+    o = jnp.moveaxis(o, -2, 1)                   # (B, Sq, KV, G, hd)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention(
+    params: dict,
+    cfg: ModelCfg,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv: Optional[tuple[jax.Array, jax.Array]] = None,  # cross-attention
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Returns `out`, or `(out, (k, v))` when return_kv (prefill cache fill).
+    """
+    B, S, _ = x.shape
+    hd = cfg.hd()
+    scale = 1.0 / np.sqrt(hd)
+    if kv is not None:  # cross-attention: queries only; K/V precomputed
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        if cfg.qkv_bias:
+            q = q + params["bq"]
+        k, v = kv
+        causal = False
+    else:
+        q, k, v = _project_qkv(params, cfg, x, positions)
+    q_pos = jnp.arange(S)
+    k_pos = jnp.arange(k.shape[1])
+    if max(S, k.shape[1]) <= DIRECT_MAX_SEQ:
+        o = _attend_direct(q, k, v, cfg, scale, q_pos, k_pos, causal,
+                           window)
+    elif ATTN_IMPL == "flash":
+        o = flash_mod.flash_attention(
+            q, k, v, num_kv_heads=cfg.num_kv_heads, scale=scale,
+            softcap=cfg.attn_softcap, causal=causal, window=window,
+            seq_shard=_want_seq_shard(cfg))
+    else:  # "chunked": the scan baseline kept for §Perf comparison
+        o = _attend_chunked(q, k, v, cfg, scale, q_pos, k_pos, causal,
+                            window)
+    o = constrain(o, ("batch", "seq", "heads", None))
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out, None
+
+
+def cross_kv(params: dict, cfg: ModelCfg, enc_out: jax.Array):
+    """Precompute encoder K/V for cross-attention (cached at prefill)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    if cfg.qkv_bias:
+        k, v = k + params["bk"], v + params["bv"]
+    return k, v
+
+
+def decode_attention(
+    params: dict,
+    cfg: ModelCfg,
+    x: jax.Array,                 # (B, 1, D)
+    cache_k: jax.Array,           # (B, S, KV, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,               # scalar int32: write/attend position
+    *,
+    window: Optional[int] = None,
+    cross: bool = False,
+):
+    """One-token decode against a KV cache.
+
+    Returns (out (B, 1, D), new_k, new_v).  With cross=True the cache is the
+    (static) encoder K/V and nothing is written.
+    """
+    B = x.shape[0]
+    hd = cfg.hd()
+    KV = cfg.num_kv_heads
+    G = cfg.num_heads // KV
+    scale = 1.0 / np.sqrt(hd)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    if not cross:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if cfg.qkv_bias:
+            k_new, v_new = k_new + params["bk"], v_new + params["bv"]
+        posb = jnp.full((B, 1), pos, jnp.int32)
+        if cfg.rope_kind == "rope":
+            q = apply_rope(q, posb, cfg.rope_theta)
+            k_new = apply_rope(k_new, posb, cfg.rope_theta)
+        elif cfg.rope_kind == "mrope":
+            pos3 = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+            q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+            k_new = apply_mrope(k_new, pos3, cfg.rope_theta,
+                                cfg.mrope_sections)
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+
+    S = cache_k.shape[1]
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = _scores(qg, cache_k, cfg, scale)[:, :, :, 0, :]   # (B, KV, G, S)
+    k_pos = jnp.arange(S)
+    ok = k_pos <= pos if not cross else jnp.ones((S,), bool)
+    if window is not None and not cross:
+        ok &= (pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(cache_v.dtype), cache_v)
+    o = o.reshape(B, 1, cfg.num_heads, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return out, cache_k, cache_v

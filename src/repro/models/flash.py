@@ -1,0 +1,236 @@
+"""Memory-efficient attention (flash-style) in pure JAX with custom VJP.
+
+Why not plain `lax.scan` + `jax.checkpoint`: reverse-mode through a scan
+stores every iteration's carry, and the running-softmax carry includes the
+(B, KV, G, Sq, hd) f32 accumulator — ~5 GiB per layer at train_4k scale,
+which is what blew the dry-run memory analysis to 30 GiB/device.
+
+This implementation is the TPU-native answer:
+  * forward: scan over KV chunks with running (max, denom, acc); saves only
+    (q, k, v, o, m, l) — O(S·d), no S² residuals;
+  * backward: custom VJP that *recomputes* chunk scores (flash-2 schedule):
+    dq accumulates as the scan carry, dk/dv are emitted per chunk as ys;
+  * static triangular schedule: the query axis is split into chunks in a
+    Python loop, and each q-chunk only visits the KV chunks its causal /
+    sliding-window mask allows.  Because the schedule is static, the skipped
+    chunks cost zero FLOPs in the compiled HLO — causal attention compiles
+    to ~S²/2 MACs, not S² (this is visible in cost_analysis and is the
+    "compute term" win recorded in EXPERIMENTS.md §Perf).
+
+Supports GQA (KV-grouped heads), attention softcap (gemma2) including its
+derivative, and sliding windows.  Oracle: tests/test_flash.py checks fwd+bwd
+against the direct softmax attention to ~1e-5.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0e38
+Q_CHUNK = 1024
+KV_CHUNK = 512
+
+
+def _pick_chunk(size: int, target: int) -> int:
+    """Largest divisor of `size` that is <= target (handles Sk=1500 cross
+    attention and other non-power-of-two sequence lengths)."""
+    c = min(target, size)
+    while size % c:
+        c -= 1
+    return c
+
+
+def _mask(q_lo: jax.Array, cq: int, k_lo: jax.Array, ck: int, causal: bool,
+          window: Optional[int]) -> jax.Array:
+    """(cq, ck) keep-mask from *scalar* chunk offsets.
+
+    Offsets stay scalars until inside the scan body so XLA cannot
+    constant-fold the masks of every chunk into one (n, cq, ck) pred buffer
+    (a 0.5 GiB surprise at train_4k scale before this was rewritten).
+    """
+    qp = q_lo + jnp.arange(cq)
+    kp = k_lo + jnp.arange(ck)
+    d = qp[:, None] - kp[None, :]
+    ok = jnp.ones((cq, ck), bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return ok
+
+
+def _scores(q, k, scale, softcap):
+    """q: (B,cq,KV,G,hd) k: (B,ck,KV,hd) -> f32 (B,KV,G,cq,ck)."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _dscores(q, k, scale, softcap, ds_capped):
+    """Backprop through scale (+softcap) given d(capped scores)."""
+    if softcap is None:
+        return ds_capped * scale
+    raw = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                     preferred_element_type=jnp.float32) * scale
+    t = jnp.tanh(raw / softcap)
+    return ds_capped * (1.0 - t * t) * scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _mea_chunk(q, k, v, scale, softcap, causal, window, positions):
+    """One q-chunk attended over its full (statically sliced) KV range."""
+    o, _, _ = _mea_fwd_impl(q, k, v, scale, softcap, causal, window,
+                            positions)
+    return o
+
+
+def _mea_fwd_impl(q, k, v, scale, softcap, causal, window, positions):
+    qpos, kpos = positions  # scalar offsets of q[0] / k[0]
+    B, cq_, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    ck = _pick_chunk(Sk, KV_CHUNK)
+    n = Sk // ck
+
+    ks = jnp.moveaxis(k.reshape(B, n, ck, KV, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, n, ck, KV, hd), 1, 0)
+    q_lo, k_lo = qpos, kpos  # scalar chunk offsets
+    cq = q.shape[1]
+
+    def body(carry, inp):
+        m_p, l_p, acc = carry
+        k_c, v_c, i = inp
+        s = _scores(q, k_c, scale, softcap)
+        keep = _mask(q_lo, cq, k_lo + i * ck, ck, causal, window)
+        s = jnp.where(keep, s, NEG_INF)
+        m_n = jnp.maximum(m_p, s.max(axis=-1))
+        corr = jnp.exp(m_p - m_n)
+        p = jnp.exp(s - m_n[..., None])
+        l_n = l_p * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v_c.dtype), v_c,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_n, l_n, acc), None
+
+    init = (jnp.full((B, KV, G, cq), NEG_INF, jnp.float32),
+            jnp.zeros((B, KV, G, cq), jnp.float32),
+            jnp.zeros((B, KV, G, cq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init,
+                                  (ks, vs, jnp.arange(n, dtype=jnp.int32)))
+    o = acc / jnp.maximum(l, 1e-37)[..., None]
+    o = jnp.moveaxis(o, -2, 1).astype(q.dtype)      # (B,cq,KV,G,hd)
+    return o, m, l
+
+
+def _mea_fwd(q, k, v, scale, softcap, causal, window, positions):
+    o, m, l = _mea_fwd_impl(q, k, v, scale, softcap, causal, window,
+                            positions)
+    return o, (q, k, v, o, m, l)
+
+
+def _mea_bwd(scale, softcap, causal, window, positions, res, do):
+    q, k, v, o, m, l = res
+    q_lo, k_lo = positions
+    B, cq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    ck = _pick_chunk(Sk, KV_CHUNK)
+    n = Sk // ck
+
+    do_t = jnp.moveaxis(do.astype(jnp.float32), 1, -2)   # (B,KV,G,cq,hd)
+    o_t = jnp.moveaxis(o.astype(jnp.float32), 1, -2)
+    D = jnp.sum(do_t * o_t, axis=-1)                     # (B,KV,G,cq)
+    linv = 1.0 / jnp.maximum(l, 1e-37)
+
+    ks = jnp.moveaxis(k.reshape(B, n, ck, KV, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, n, ck, KV, hd), 1, 0)
+
+    def body(dq_acc, inp):
+        k_c, v_c, i = inp
+        s = _scores(q, k_c, scale, softcap)
+        keep = _mask(q_lo, cq, k_lo + i * ck, ck, causal, window)
+        s = jnp.where(keep, s, NEG_INF)
+        p = jnp.exp(s - m[..., None]) * linv[..., None]  # (B,KV,G,cq,ck)
+        dp = jnp.einsum("bkgqh,bskh->bkgqs", do_t, v_c,
+                        preferred_element_type=jnp.float32)
+        ds_cap = p * (dp - D[..., None])
+        ds = _dscores(q, k_c, scale, softcap, ds_cap)
+        dq_c = jnp.einsum("bkgqs,bskh->bqkgh", ds, k_c,
+                          preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bkgqs,bqkgh->bskh", ds, q.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        dv_c = jnp.einsum("bkgqs,bkgqh->bskh", p, do_t,
+                          preferred_element_type=jnp.float32)
+        return dq_acc + dq_c, (dk_c.astype(k.dtype), dv_c.astype(v.dtype))
+
+    dq0 = jnp.zeros((B, cq, KV, G, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0,
+                                  (ks, vs, jnp.arange(n, dtype=jnp.int32)))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, KV, hd)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, KV, hd)
+    return dq.astype(q.dtype), dk, dv
+
+
+_mea_chunk.defvjp(_mea_fwd, _mea_bwd)
+
+
+def flash_attention(
+    q: jax.Array,                 # (B, Sq, H, hd)
+    k: jax.Array,                 # (B, Sk, KV, hd)
+    v: jax.Array,
+    *,
+    num_kv_heads: int,
+    scale: float,
+    softcap: Optional[float] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,            # absolute position of q[0]
+    seq_shard: bool = False,      # sequence-parallel: shard q chunks over
+                                  # "model" when heads can't take the axis
+) -> jax.Array:
+    """Static triangular q-chunk schedule over the custom-VJP inner kernel."""
+    from repro.models.sharding import constrain  # local import: no cycle
+
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = num_kv_heads
+    G = H // KV
+    cq = _pick_chunk(Sq, Q_CHUNK)
+    nq = Sq // cq
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    if seq_shard:
+        # one reshard for the whole tensor (per-chunk constraints caused
+        # GSPMD to bounce layouts every chunk — §Perf iteration 1)
+        qg = constrain(qg, ("batch", "qseq", None, None, None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+
+    outs = []
+    for i in range(nq):
+        q_c = jax.lax.slice_in_dim(qg, i * cq, (i + 1) * cq, axis=1)
+        q_lo, q_hi = q_offset + i * cq, q_offset + (i + 1) * cq
+        # static KV range this chunk can see
+        lo, hi = 0, Sk
+        if causal:
+            hi = min(hi, q_hi)
+        if window is not None:
+            lo = max(lo, q_lo - window + 1)
+        # align to the kv chunk so the inner scan divides evenly
+        ckv = _pick_chunk(Sk, KV_CHUNK)
+        lo = (lo // ckv) * ckv
+        hi = min(int(-(-hi // ckv) * ckv), Sk)
+        hi = max(hi, lo + ckv) if Sk >= ckv else Sk
+        k_c = jax.lax.slice_in_dim(k, lo, hi, axis=1)
+        v_c = jax.lax.slice_in_dim(v, lo, hi, axis=1)
+        o = _mea_chunk(q_c, k_c, v_c, scale, softcap, causal, window,
+                       (q_lo, lo))
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    if seq_shard:
+        out = constrain(out, ("batch", "qseq", None, None, None))
+    return out.reshape(B, Sq, H, hd)

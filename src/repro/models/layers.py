@@ -1,0 +1,132 @@
+"""Shared building blocks: init helpers, norms, rotary embeddings, MLPs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+from repro.models.sharding import constrain
+
+
+def dtype_of(cfg: ModelCfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = np.prod([shape[i] for i in range(len(shape))
+                      if i <= in_axis]) if in_axis >= 0 else shape[0]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, B, S) — temporal / height / width position ids.
+    `sections` partitions the hd/2 frequency slots among the 3 components.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    # per-frequency component selector
+    comp = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                      total_repeat_length=hd // 2)     # (hd/2,)
+    pos = jnp.moveaxis(positions3.astype(jnp.float32), 0, -1)  # (B, S, 3)
+    sel = jnp.broadcast_to(comp[None, None, :],
+                           (pos.shape[0], pos.shape[1], hd // 2))
+    pos_per_freq = jnp.take_along_axis(pos, sel, axis=-1)  # (B, S, hd/2)
+    ang = pos_per_freq * freqs
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (llama/gemma style)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), 0, dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), 0, dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), 0, dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, act=jax.nn.silu) -> jax.Array:
+    h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    names = ("batch",) + (None,) * (h.ndim - 2) + ("mlp",)
+    h = constrain(h, names)
+    return h @ params["w_down"]
+
+
+def init_norm(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)
+
+
+def embed_tokens(cfg: ModelCfg, tok_embed: jax.Array, tokens: jax.Array
+                 ) -> jax.Array:
+    x = tok_embed[tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(cfg: ModelCfg, params: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["tok_embed"].T.astype(x.dtype)
+    else:
+        logits = x @ params["lm_head"]
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over all positions. logits (B, S, V) f32, labels (B, S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    return jnp.mean(logz - gold)

@@ -1,0 +1,119 @@
+"""Model facade: build_model(cfg) -> uniform init/loss/decode + input_specs.
+
+`input_specs(cfg, shape, ...)` returns ShapeDtypeStruct stand-ins for every
+model input of an (arch x shape) cell — the contract the multi-pod dry-run
+lowers against (no allocation).  Modality stubs live here: [audio] gets
+(B, enc_seq, D) frame embeddings, [vlm] gets patch embeddings + 3D M-RoPE
+position ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg, ShapeCfg
+from repro.core.hwaware import HwAwareConfig, apply_hardware
+from repro.models import transformer, whisper
+from repro.models.layers import dtype_of
+
+VLM_PATCHES = 1024  # vision stub: patches occupying the first positions
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelCfg
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], jax.Array]
+    init_cache: Callable[[int, int], Any]
+    decode_step: Callable[[Any, jax.Array, jax.Array, Any], tuple]
+
+
+def build_model(cfg: ModelCfg,
+                hw_aware: Optional[HwAwareConfig] = None,
+                chip_key: Optional[jax.Array] = None) -> Model:
+    """hw_aware: the paper's generalized in-situ learning — the loss sees
+    params through the 8-bit DAC + mismatch model (core/hwaware.py)."""
+
+    def maybe_hw(params):
+        if hw_aware is None:
+            return params
+        key = chip_key if chip_key is not None else jax.random.PRNGKey(0)
+        return apply_hardware(params, hw_aware, key)
+
+    if cfg.enc_dec is not None:
+        return Model(
+            cfg=cfg,
+            init=lambda key: whisper.init_encdec(key, cfg),
+            loss=lambda p, b: whisper.encdec_loss(maybe_hw(p), cfg, b),
+            init_cache=lambda b, s: whisper.init_cache(cfg, b, s),
+            decode_step=lambda p, t, pos, c: whisper.decode_step(
+                maybe_hw(p), cfg, t, pos, c),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(key, cfg),
+        loss=lambda p, b: transformer.lm_loss(maybe_hw(p), cfg, b),
+        init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+        decode_step=lambda p, t, pos, c: transformer.decode_step(
+            maybe_hw(p), cfg, t, pos, c),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelCfg, shape: ShapeCfg) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        specs["frontend_embeds"] = _sds(
+            (B, min(VLM_PATCHES, S), cfg.d_model), dtype_of(cfg))
+        specs["positions"] = _sds((3, B, S), jnp.int32)
+    elif cfg.frontend == "audio_stub":
+        specs["frontend_embeds"] = _sds(
+            (B, cfg.enc_dec.enc_seq, cfg.d_model), dtype_of(cfg))
+    return specs
+
+
+def decode_input_specs(cfg: ModelCfg, shape: ShapeCfg) -> dict:
+    """serve_step inputs: one new token + a seq_len KV/state cache."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": jax.tree.map(lambda x: _sds(x.shape, x.dtype), cache),
+    }
+
+
+def make_dummy_batch(cfg: ModelCfg, shape: ShapeCfg, key: jax.Array) -> dict:
+    """Concrete random batch matching train_input_specs (smoke tests)."""
+    specs = train_input_specs(cfg, shape)
+    k1, k2 = jax.random.split(key)
+    batch = {
+        "tokens": jax.random.randint(
+            k1, specs["tokens"].shape, 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(
+            k2, specs["labels"].shape, 0, cfg.vocab_size, jnp.int32),
+    }
+    if "frontend_embeds" in specs:
+        batch["frontend_embeds"] = 0.02 * jax.random.normal(
+            k1, specs["frontend_embeds"].shape, jnp.float32
+        ).astype(specs["frontend_embeds"].dtype)
+    if "positions" in specs:
+        B, S = batch["tokens"].shape
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S))
+    return batch

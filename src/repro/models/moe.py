@@ -1,0 +1,130 @@
+"""Mixture-of-Experts: top-k routing, GShard-style one-hot dispatch, EP.
+
+Dispatch design (learned the hard way — see EXPERIMENTS.md §Perf):
+a sort/scatter dispatch is FLOP-free but GSPMD cannot shard data-dependent
+scatters across the token axis, so the partitioner *replicated* the global
+(T·k, D) gather/scatter buffers — 43 GiB/device at kimi-k2 train_4k.  The
+GShard/Switch one-hot-einsum dispatch keeps every tensor's axes explicit
+(batch b, token t, expert e, capacity c), so the batch dim shards over
+(pod, data) and the expert dim over model with zero replication.
+
+Tokens are processed in chunks of TOK_CHUNK along the sequence (lax.scan):
+capacity is per (batch-row, chunk) — C = ceil(chunk·k·cf/E) — which bounds
+the dispatch one-hot to O(chunk·E·C) instead of O(S·E·C).  The one-hot
+einsums add ~12-25% FLOPs over the raw expert matmuls (kimi geometry);
+that overhead is visible in the roofline's useful-FLOP fraction and is the
+price of an all-XLA, partitioner-friendly MoE.
+
+Overflowed tokens (rank ≥ C) drop (their one-hot row is all-zero), standard
+at-scale behavior; combine weights renormalize over the kept experts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoECfg
+from repro.models.layers import dense_init, init_mlp, mlp
+from repro.models.sharding import constrain
+
+TOK_CHUNK = 512
+
+
+def init_moe(key, d_model: int, m: MoECfg, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    E, F = m.num_experts, m.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, E), 0, jnp.float32),
+        "we_gate": dense_init(ks[1], (E, d_model, F), 1, dtype),
+        "we_up": dense_init(ks[2], (E, d_model, F), 1, dtype),
+        "we_down": dense_init(ks[3], (E, F, d_model), 1, dtype),
+    }
+    if m.num_shared:
+        shared = init_mlp(ks[4], d_model, m.num_shared * F, dtype)
+        p["shared"] = {"ws_gate": shared["w_gate"], "ws_up": shared["w_up"],
+                       "ws_down": shared["w_down"]}
+    return p
+
+
+def _capacity(chunk: int, m: MoECfg) -> int:
+    c = int(np.ceil(chunk * m.top_k * m.capacity_factor / m.num_experts))
+    return max(8, -(-c // 8) * 8)
+
+
+def _route_chunk(params, m: MoECfg, xc: jax.Array, C: int):
+    """xc: (B, c, D) -> (expert buffers out, aux stats).
+
+    All einsums carry explicit (b, e) axes: b shards over (pod, data),
+    e over model.
+    """
+    B, c, D = xc.shape
+    E, k = m.num_experts, m.top_k
+
+    logits = xc.astype(jnp.float32) @ params["router"]        # (B, c, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                       # (B, c, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)            # (B, c, k, E)
+    assign = oh.sum(2)                                        # (B, c, E)
+    gate_e = jnp.einsum("bcke,bck->bce", oh, gate)            # (B, c, E)
+    # rank of each token within its expert, per (batch-row, chunk) group
+    rank = jnp.cumsum(assign, axis=1) - assign                # exclusive
+    rank = jnp.where(assign > 0, rank, C)                     # drop non-hits
+    disp = jax.nn.one_hot(rank.astype(jnp.int32), C,
+                          dtype=xc.dtype)                     # (B, c, E, C)
+    disp = disp * assign[..., None].astype(xc.dtype)
+    disp = constrain(disp, ("batch", None, "experts", None))
+
+    # dispatch: (B, E, C, D)
+    buf = jnp.einsum("btec,btd->becd", disp, xc)
+    buf = constrain(buf, ("batch", "experts", "cap", None))
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["we_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, params["we_up"])
+    h = constrain(h, ("batch", "experts", "cap", "mlp"))
+    out = jnp.einsum("becf,efd->becd", h, params["we_down"])
+    out = constrain(out, ("batch", "experts", "cap", None))
+    # combine, weighted by the (renormalized) gates
+    comb = disp * gate_e[..., None].astype(xc.dtype)
+    y = jnp.einsum("btec,becd->btd", comb, out)
+
+    # load-balance stats (Switch aux loss terms)
+    me = probs.mean(axis=(0, 1))                              # (E,)
+    ce = assign.mean(axis=(0, 1)) / k
+    return y, me, ce
+
+
+def moe_layer(params: dict, m: MoECfg, x: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    E = m.num_experts
+    c = min(TOK_CHUNK, S)
+    C = _capacity(c, m)
+
+    if S % c != 0 or S == c:
+        y, me, ce = _route_chunk(params, m, x, _capacity(S, m))
+        aux = E * jnp.sum(me * ce)
+    else:
+        n = S // c
+        xc = jnp.moveaxis(x.reshape(B, n, c, D), 1, 0)        # (n, B, c, D)
+
+        def body(carry, xi):
+            yi, me, ce = _route_chunk(params, m, xi, C)
+            return carry + jnp.stack([me, ce]), yi
+
+        stats0 = jnp.zeros((2, E), jnp.float32)
+        stats, ys = jax.lax.scan(body, stats0, xc)
+        me, ce = stats[0] / n, stats[1] / n
+        aux = E * jnp.sum(me * ce)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+
+    if "shared" in params:
+        sp = params["shared"]
+        y = y + mlp({"w_gate": sp["ws_gate"], "w_up": sp["ws_up"],
+                     "w_down": sp["ws_down"]}, x)
+    return constrain(y, ("batch", "seq", None)), aux

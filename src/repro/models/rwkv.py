@@ -1,0 +1,176 @@
+"""RWKV-6 (Finch) block: token shift + data-dependent-decay WKV recurrence.
+
+Time mixing per head (hd = 64):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with w_t = exp(-exp(wx_t)) produced by a low-rank ("LoRA") projection of the
+token-shifted input — the *data-dependent decay* that distinguishes RWKV-6
+from RWKV-4/5.
+
+Training evaluates the recurrence with a chunked two-level schedule:
+sequential scan over chunks carrying S (B, H, hd, hd), parallel intra-chunk
+einsums — O(S·hd²) work, O(1) state, so the long_500k decode cell is a
+single constant-memory step (family "ssm" in the assignment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg, RWKVCfg
+from repro.models.layers import dense_init
+from repro.models.sharding import constrain
+
+CHUNK = 64
+
+
+def init_rwkv_tmix(key, cfg: ModelCfg, dtype) -> dict:
+    D = cfg.d_model
+    rc = cfg.rwkv
+    H, hd = D // rc.head_dim, rc.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": 0.5 * jnp.ones((5, D), jnp.float32),   # shift mix r,k,v,g,w
+        "w_r": dense_init(ks[0], (D, D), 0, dtype),
+        "w_k": dense_init(ks[1], (D, D), 0, dtype),
+        "w_v": dense_init(ks[2], (D, D), 0, dtype),
+        "w_g": dense_init(ks[3], (D, D), 0, dtype),
+        "w_o": dense_init(ks[4], (D, D), 0, dtype),
+        "decay_a": dense_init(ks[5], (D, rc.decay_lora), 0, jnp.float32),
+        "decay_b": dense_init(ks[6], (rc.decay_lora, D), 0, jnp.float32),
+        "decay_bias": jnp.full((D,), -5.0, jnp.float32),
+        "u_bonus": dense_init(ks[7], (H, hd), 0, jnp.float32),
+        "ln_x": jnp.ones((D,), jnp.float32),         # group-norm scale
+    }
+
+
+def init_rwkv_cmix(key, cfg: ModelCfg, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, D), jnp.float32),
+        "w_k": dense_init(ks[0], (D, F), 0, dtype),
+        "w_v": dense_init(ks[1], (F, D), 0, dtype),
+        "w_r": dense_init(ks[2], (D, D), 0, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None):
+    """x_{t-1} per position; `last` is the (f32) carry for decode."""
+    if last is None:
+        prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        prev = jnp.concatenate([last[:, None].astype(x.dtype), x[:, :-1]],
+                               axis=1)
+    return prev
+
+
+def _wkv_chunked(r, k, v, w, u, S0):
+    """Chunked WKV.  r,k,v: (B, T, H, hd); w: (B, T, H, hd) decay in (0,1);
+    u: (H, hd); S0: (B, H, hd, hd).  Returns (y (B,T,H,hd), S_final).
+
+    Within a chunk of length c, with W_t = prod_{s<=t} diag(w_s) (cumprod):
+      y_t = r_t (W_{t-1} S0) + sum_{s<t} r_t diag(W_{t-1}/W_s) k_s v_s^T
+            + (r_t * u * k_t) v_t^T
+    evaluated with einsums; S0 then advances by the whole chunk.
+    """
+    B, T, H, hd = r.shape
+    c = min(CHUNK, T)
+    while T % c:   # largest divisor of T <= CHUNK (odd decode lengths)
+        c -= 1
+    n = T // c
+    rc_ = r.reshape(B, n, c, H, hd)
+    kc_ = k.reshape(B, n, c, H, hd)
+    vc_ = v.reshape(B, n, c, H, hd)
+    wc_ = w.reshape(B, n, c, H, hd)
+
+    def chunk(S, inp):
+        rc, kc, vc, wc = inp                      # (B, c, H, hd)
+        logw = jnp.log(jnp.clip(wc, 1e-20, 1.0))
+        cs = jnp.cumsum(logw, axis=1)                        # log W_t (<= 0)
+        Wprev = jnp.exp(cs - logw)                           # W_{t-1} <= 1
+        # carry-in term: r_t diag(W_{t-1}) S0
+        rw = rc * Wprev                                      # (B,c,H,hd)
+        y_in = jnp.einsum("bthi,bhij->bthj", rw, S)
+        # intra-chunk: sum_{s<t} (r_t W_{t-1} / W_s · k_s) v_s
+        # 1/W_s is clamped at e^30: contributions where the decay ratio has
+        # shrunk below e^-30 are numerically zero anyway (see module doc).
+        kw = kc * jnp.exp(jnp.minimum(-cs, 30.0))
+        att = jnp.einsum("bthi,bshi->bhts", rw, kw)          # (B,H,c,c)
+        mask = jnp.tril(jnp.ones((c, c), bool), -1)
+        att = jnp.where(mask, att, 0.0)
+        y_intra = jnp.einsum("bhts,bshj->bthj", att, vc)
+        # diagonal bonus term
+        y_diag = jnp.einsum("bthi,bthj->bthj", rc * u * kc, vc)
+        y = y_in + y_intra + y_diag
+        # advance state: S' = diag(W_c) S + sum_s diag(W_c/W_s) k_s v_s^T
+        Wc = jnp.exp(cs[:, -1])                              # (B,H,hd)
+        ratio = jnp.exp(cs[:, -1][:, None] - cs)             # <= 1
+        S_new = Wc[..., None] * S + jnp.einsum(
+            "bshi,bshj->bhij", ratio * kc, vc)
+        return S_new, y
+
+    S_fin, y_chunks = jax.lax.scan(
+        chunk, S0,
+        (jnp.moveaxis(rc_, 1, 0), jnp.moveaxis(kc_, 1, 0),
+         jnp.moveaxis(vc_, 1, 0), jnp.moveaxis(wc_, 1, 0)))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(B, T, H, hd)
+    return y, S_fin
+
+
+def rwkv_time_mix(params: dict, cfg: ModelCfg, x: jax.Array,
+                  state: dict | None = None, return_state: bool = False):
+    """x: (B, S, D); state: {"shift": (B, D), "wkv": (B, H, hd, hd)}."""
+    B, T, D = x.shape
+    rc = cfg.rwkv
+    H, hd = D // rc.head_dim, rc.head_dim
+    prev = _token_shift(x, None if state is None else state["shift"])
+    mu = params["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + mu[i] * (prev - x) for i in range(5))
+
+    r = (xr @ params["w_r"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(B, T, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["w_g"])
+    wx = (xw.astype(jnp.float32) @ params["decay_a"]) @ params["decay_b"]
+    w = jnp.exp(-jnp.exp(wx + params["decay_bias"]))     # (B,T,D) in (0,1)
+    w = w.reshape(B, T, H, hd)
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None \
+        else state["wkv"]
+    y, S_fin = _wkv_chunked(r, k, v, w, params["u_bonus"], S0)
+    # per-head group norm
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(B, T, D) * params["ln_x"]
+    out = (y.astype(x.dtype) * g) @ params["w_o"]
+    new_state = None
+    if return_state:
+        new_state = {"shift": x[:, -1].astype(jnp.float32), "wkv": S_fin}
+    return out, new_state
+
+
+def rwkv_channel_mix(params: dict, cfg: ModelCfg, x: jax.Array,
+                     state: jax.Array | None = None,
+                     return_state: bool = False):
+    prev = _token_shift(x, state)
+    mu = params["mu"].astype(x.dtype)
+    xk = x + mu[0] * (prev - x)
+    xr = x + mu[1] * (prev - x)
+    kk = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    kk = constrain(kk, ("batch", "seq", "mlp"))
+    out = jax.nn.sigmoid(xr @ params["w_r"]) * (kk @ params["w_v"])
+    return out, (x[:, -1].astype(jnp.float32) if return_state else None)
+
+
+def rwkv_state_shapes(cfg: ModelCfg, batch: int) -> dict:
+    D = cfg.d_model
+    rc = cfg.rwkv
+    H, hd = D // rc.head_dim, rc.head_dim
+    return {
+        "shift_t": (batch, D),
+        "wkv": (batch, H, hd, hd),
+        "shift_c": (batch, D),
+    }

@@ -1,0 +1,219 @@
+"""Logical-axis sharding rules (MaxText-style), divisibility-checked.
+
+Every tensor dimension carries a *logical* name; `LOGICAL_RULES` maps names
+to mesh axes.  A dimension is sharded only if its size divides the mesh axis
+product — otherwise it silently falls back to replication (e.g. 40 RWKV
+heads on a 16-way model axis, or whisper's 51865 vocab).  This keeps one
+rule-set valid for all 10 architectures on any mesh, which is what lets
+`dryrun.py` sweep 40 cells x 2 meshes without per-cell hand-sharding.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Parallelism preset (EXPERIMENTS §Perf):
+#   "2d"   — FSDP(data) x TP(model): the baseline below.
+#   "fsdp" — ZeRO-style: batch over EVERY axis, params sharded over
+#            (data, model), no tensor parallelism.  Kills the TP activation
+#            all-reduces that dominate dense train_4k cells (96% of
+#            collective bytes on deepseek-67b) and sidesteps head-count
+#            divisibility (gemma2-2b).  Needs global_batch % n_devices == 0.
+PARALLELISM = os.environ.get("REPRO_PARALLELISM", "2d")
+
+# logical axis -> mesh axes (tuple = sharded over several mesh axes)
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    # decode KV caches shard their sequence dim over "model" (flash-decode
+    # style): the batch dim already owns (pod, data), and at 32k-512k the
+    # cache, not the weights, is the per-device memory budget.
+    "kv_seq": ("model",),
+    # sequence-parallel attention (beyond-paper opt, EXPERIMENTS §Perf):
+    # when an arch's head count cannot shard over "model" (gemma2-2b: 8
+    # heads on a 16-way axis), the query/seq dim takes the axis instead.
+    "qseq": ("model",),
+    # unsharded logical axes
+    "embed": (),
+    "seq": (),
+    "layers": (),
+    "hd": (),
+    "state": (),
+    "conv": (),
+    "cap": (),
+    "pos3": (),
+    # quantized-optimizer block payloads: shape-agnostic flat blocks shard
+    # over every non-batch axis
+    "opt_blocks": ("data", "model"),
+}
+
+if PARALLELISM == "fsdp":
+    LOGICAL_RULES.update({
+        "batch": ("pod", "data", "model"),
+        "fsdp": ("data", "model"),
+        "heads": (), "kv_heads": (), "mlp": (), "vocab": (),
+        "experts": ("data", "model"),  # EP still shards expert weights
+        "kv_seq": (), "qseq": (),
+    })
+
+_local = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Ambient mesh for `constrain` (None = single-device, no constraints)."""
+    prev = getattr(_local, "mesh", None)
+    _local.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _local.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_local, "mesh", None)
+
+
+def _axes_for(mesh: Mesh, dim: int, name: Optional[str]):
+    """Mesh axes for one dim, or None if not divisible / unmapped."""
+    if name is None:
+        return None
+    axes = tuple(a for a in LOGICAL_RULES.get(name, ())
+                 if a in mesh.shape)
+    if not axes:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if dim % size != 0:
+        # try a prefix of the axes (e.g. batch=(pod,data) -> (pod,))
+        for cut in range(len(axes) - 1, 0, -1):
+            sub = axes[:cut]
+            s = int(np.prod([mesh.shape[a] for a in sub]))
+            if dim % s == 0:
+                return sub if len(sub) > 1 else sub[0]
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec(shape: Sequence[int], names: Sequence[Optional[str]],
+         mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return P()
+    assert len(shape) == len(names), (shape, names)
+    used: set[str] = set()
+    parts = []
+    for dim, nm in zip(shape, names):
+        ax = _axes_for(mesh, dim, nm)
+        # one mesh axis may shard at most one dim
+        flat = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+        if any(a in used for a in flat):
+            ax = None
+        else:
+            used.update(flat)
+        parts.append(ax)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint under the ambient mesh (no-op without one)."""
+    mesh = current_mesh()
+    if mesh is None or np.prod(list(mesh.shape.values())) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(x.shape, names, mesh)))
+
+
+def named_sharding(mesh: Mesh, shape: Sequence[int],
+                   names: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(mesh, spec(shape, names, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: leaf-name based rules.
+# Init code names every leaf so these rules are total; anything unknown is
+# replicated (safe default).
+# ---------------------------------------------------------------------------
+_PARAM_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [
+    ("tok_embed", ("vocab", "fsdp")),
+    ("pos_embed", (None, None)),
+    ("lm_head", ("fsdp", "vocab")),
+    ("wq", ("fsdp", "heads", None)),
+    ("wk", ("fsdp", "kv_heads", None)),
+    ("wv", ("fsdp", "kv_heads", None)),
+    ("wo", ("heads", None, "fsdp")),
+    ("bq", ("heads", None)),
+    ("bk", ("kv_heads", None)),
+    ("bv", ("kv_heads", None)),
+    ("w_gate", ("fsdp", "mlp")),
+    ("w_up", ("fsdp", "mlp")),
+    ("w_down", ("mlp", "fsdp")),
+    ("router", ("fsdp", None)),
+    ("we_gate", ("experts", "fsdp", None)),
+    ("we_up", ("experts", "fsdp", None)),
+    ("we_down", ("experts", None, "fsdp")),
+    ("ws_gate", ("fsdp", "mlp")),     # shared expert
+    ("ws_up", ("fsdp", "mlp")),
+    ("ws_down", ("mlp", "fsdp")),
+    ("in_proj", ("fsdp", "mlp")),
+    ("conv_w", ("mlp", None)),
+    ("conv_b", ("mlp",)),
+    ("x_proj", ("mlp", None)),
+    ("dt_w", (None, "mlp")),
+    ("dt_b", ("mlp",)),
+    ("A_log", ("mlp", None)),
+    ("D_skip", ("mlp",)),
+    ("out_proj", ("mlp", "fsdp")),
+    ("w_r", ("fsdp", "mlp")),
+    ("w_k", ("fsdp", "mlp")),
+    ("w_v", ("fsdp", "mlp")),
+    ("w_g", ("fsdp", "mlp")),
+    ("w_o", ("mlp", "fsdp")),
+    ("decay_a", ("fsdp", None)),
+    ("decay_b", (None, "fsdp")),
+]
+
+
+def _leaf_axes(path: str, ndim: int) -> tuple[Optional[str], ...]:
+    for key, names in _PARAM_RULES:
+        if path.endswith(key) or f"{key}'" in path or f"{key}]" in path:
+            if len(names) == ndim:
+                return names
+            if len(names) == ndim - 1:       # scan-stacked: leading layer dim
+                return (None,) + names
+            if len(names) == ndim - 2:       # stacked + grouped
+                return (None, None) + names
+    return (None,) * ndim
+
+
+def param_specs(params, mesh: Optional[Mesh] = None):
+    """Pytree of PartitionSpec for a params pytree (name-rule based)."""
+    mesh = mesh or current_mesh()
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves, treedef = flat
+    out = []
+    for path, w in leaves:
+        pstr = jax.tree_util.keystr(path)
+        names = _leaf_axes(pstr, w.ndim)
+        out.append(spec(w.shape, names, mesh) if mesh else P())
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh),
+        is_leaf=lambda s: isinstance(s, P))

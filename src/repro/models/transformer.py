@@ -1,0 +1,438 @@
+"""Decoder-only LM assembly: dense / MoE / hybrid(Mamba) / RWKV families.
+
+Layers are grouped into *periods* (1 for uniform stacks, 2 for gemma2's
+local/global alternation, 8 for jamba's mamba:attn = 7:1) and the groups are
+`lax.scan`-stacked: parameters carry a leading G = L/P dim, so HLO size is
+O(period), not O(depth) — a 95-layer deepseek compiles as fast as a 4-layer
+toy.  `remat` wraps the scanned body for training.
+
+A `first_dense` prefix (kimi-k2's dense layer 0) is kept unstacked.
+
+Decode threads a cache pytree through the same group scan (cache slices are
+scan xs/ys), so train/prefill/decode all share one layer implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import (
+    cross_entropy,
+    dense_init,
+    dtype_of,
+    embed_tokens,
+    init_mlp,
+    init_norm,
+    mlp,
+    rms_norm,
+    unembed,
+)
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Layer plans
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    kind: str            # "attn" | "mamba" | "rwkv"
+    mlp: str             # "dense" | "moe" | "cmix"
+    window: Optional[int] = None
+
+
+def period_plan(cfg: ModelCfg) -> list[LayerPlan]:
+    """Per-period layer plans (absolute layer i = group*P + p + prefix)."""
+    if cfg.rwkv is not None:
+        return [LayerPlan("rwkv", "cmix")]
+    if cfg.hybrid is not None:
+        plans = []
+        for p in range(cfg.hybrid.period):
+            kind = "attn" if p == cfg.hybrid.attn_index else "mamba"
+            use_moe = (cfg.moe is not None and
+                       p % cfg.moe.every == cfg.moe.every - 1)
+            plans.append(LayerPlan(kind, "moe" if use_moe else "dense"))
+        return plans
+    if cfg.attn_type == "local_global":
+        return [LayerPlan("attn", "dense", window=cfg.window),
+                LayerPlan("attn", "dense", window=None)]
+    use_moe = cfg.moe is not None
+    return [LayerPlan("attn", "moe" if use_moe else "dense")]
+
+
+def prefix_plans(cfg: ModelCfg) -> list[LayerPlan]:
+    if cfg.moe is not None and cfg.moe.first_dense > 0:
+        return [LayerPlan("attn", "dense")] * cfg.moe.first_dense
+    return []
+
+
+def n_groups(cfg: ModelCfg) -> int:
+    P = len(period_plan(cfg))
+    pre = len(prefix_plans(cfg))
+    assert (cfg.num_layers - pre) % P == 0, (cfg.num_layers, pre, P)
+    return (cfg.num_layers - pre) // P
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelCfg, plan: LayerPlan) -> dict:
+    dtype = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"norm1": init_norm(cfg.d_model),
+                         "norm2": init_norm(cfg.d_model)}
+    if cfg.post_norms:
+        p["norm1_post"] = init_norm(cfg.d_model)
+        p["norm2_post"] = init_norm(cfg.d_model)
+    if plan.kind == "attn":
+        p["attn"] = attn_mod.init_attention(k1, cfg, dtype)
+    elif plan.kind == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(k1, cfg.d_model, cfg.hybrid, dtype)
+    elif plan.kind == "rwkv":
+        p["tmix"] = rwkv_mod.init_rwkv_tmix(k1, cfg, dtype)
+    if plan.mlp == "dense":
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif plan.mlp == "moe":
+        p["moe"] = moe_mod.init_moe(k2, cfg.d_model, cfg.moe, dtype)
+    elif plan.mlp == "cmix":
+        p["cmix"] = rwkv_mod.init_rwkv_cmix(k2, cfg, dtype)
+    return p
+
+
+def init_lm(key, cfg: ModelCfg) -> dict:
+    dtype = dtype_of(cfg)
+    keys = jax.random.split(key, 4)
+    plans = period_plan(cfg)
+    G = n_groups(cfg)
+
+    def init_group(k):
+        kk = jax.random.split(k, len(plans))
+        return {f"layer_{p}": _init_layer(kk[p], cfg, plan)
+                for p, plan in enumerate(plans)}
+
+    group_keys = jax.random.split(keys[0], G)
+    blocks = jax.vmap(init_group)(group_keys)   # stacked leading G dim
+
+    params: dict[str, Any] = {
+        "tok_embed": dense_init(keys[1], (cfg.vocab_size, cfg.d_model), 0,
+                                dtype),
+        "blocks": blocks,
+        "final_norm": init_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[2], (cfg.d_model, cfg.vocab_size), 0, dtype)
+    pre = prefix_plans(cfg)
+    if pre:
+        kk = jax.random.split(keys[3], len(pre))
+        params["prefix"] = [
+            _init_layer(kk[i], cfg, plan) for i, plan in enumerate(pre)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+def _norm(p, name, cfg, x):
+    return rms_norm(x, p[name], cfg.norm_eps)
+
+
+def _residual(p, cfg, x, sub_out, post_name):
+    if cfg.post_norms:
+        sub_out = _norm(p, post_name, cfg, sub_out)
+    return x + sub_out
+
+
+def apply_layer(
+    p: dict,
+    cfg: ModelCfg,
+    plan: LayerPlan,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    pos: Optional[jax.Array] = None,
+    collect_kv: bool = False,
+) -> tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Returns (x, aux_loss, new_cache).
+
+    cache!=None => one-token decode; collect_kv => full-sequence prefill
+    that also returns the layer's decode cache.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[dict] = None
+    want_state = (cache is not None) or collect_kv
+    h = _norm(p, "norm1", cfg, x)
+    if plan.kind == "attn":
+        if cache is None:
+            out, kv = attn_mod.attention(p["attn"], cfg, h, positions,
+                                         causal=True, window=plan.window,
+                                         return_kv=collect_kv)
+            if collect_kv:
+                new_cache = {"k": kv[0], "v": kv[1]}
+        else:
+            out, ck, cv = attn_mod.decode_attention(
+                p["attn"], cfg, h, cache["k"], cache["v"], pos,
+                window=plan.window)
+            new_cache = {"k": ck, "v": cv}
+    elif plan.kind == "mamba":
+        out, st = mamba_mod.mamba_forward(
+            p["mamba"], cfg.hybrid, h,
+            state=cache, return_state=want_state)
+        new_cache = st
+    else:  # rwkv
+        st_in = None
+        if cache is not None:
+            st_in = {"shift": cache["shift_t"], "wkv": cache["wkv"]}
+        out, st = rwkv_mod.rwkv_time_mix(
+            p["tmix"], cfg, h, state=st_in, return_state=want_state)
+        if st is not None:
+            new_cache = {"shift_t": st["shift"], "wkv": st["wkv"]}
+    x = _residual(p, cfg, x, out, "norm1_post")
+
+    h = _norm(p, "norm2", cfg, x)
+    if plan.mlp == "dense":
+        out = mlp(p["mlp"], h, act=jax.nn.gelu if cfg.scale_embed
+                  else jax.nn.silu)
+    elif plan.mlp == "moe":
+        out, aux = moe_mod.moe_layer(p["moe"], cfg.moe, h)
+    else:  # cmix
+        out, shift_c = rwkv_mod.rwkv_channel_mix(
+            p["cmix"], cfg, h,
+            state=None if cache is None else cache["shift_c"],
+            return_state=want_state)
+        if new_cache is not None and shift_c is not None:
+            new_cache["shift_c"] = shift_c
+    x = _residual(p, cfg, x, out, "norm2_post")
+    x = constrain(x, ("batch", "seq", None))
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward_hidden(
+    params: dict,
+    cfg: ModelCfg,
+    tokens: jax.Array,                       # (B, S)
+    positions: Optional[jax.Array] = None,   # (B, S) or (3, B, S) for mrope
+    frontend_embeds: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (final hidden (B, S, D), aux_loss) — no unembed."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.rope_kind == "mrope":
+            positions = jnp.broadcast_to(positions, (3, B, S))
+    x = embed_tokens(cfg, params["tok_embed"], tokens)
+    if frontend_embeds is not None:
+        # modality stub: precomputed patch/frame embeddings own the first
+        # S_f positions (paper-assigned rule: frontend is out of scope)
+        sf = frontend_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice(
+            x, frontend_embeds.astype(x.dtype), (0, 0, 0))
+    x = constrain(x, ("batch", "seq", None))
+
+    plans = period_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    for p, plan in zip(params.get("prefix", []), prefix_plans(cfg)):
+        x, aux, _ = apply_layer(p, cfg, plan, x, positions)
+        aux_total = aux_total + aux
+
+    def group_body(carry, gparams):
+        x, aux_acc = carry
+        for i, plan in enumerate(plans):
+            x, aux, _ = apply_layer(gparams[f"layer_{i}"], cfg, plan, x,
+                                    positions)
+            aux_acc = aux_acc + aux
+        return (x, aux_acc), None
+
+    body = group_body
+    if cfg.remat:
+        # REPRO_REMAT=dots saves matmul outputs: skips recomputing the
+        # layer's dots AND their TP all-reduces in backward, for ~1 extra
+        # activation-set of memory (§Perf)
+        import os
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if os.environ.get("REPRO_REMAT") == "dots"
+                  else jax.checkpoint_policies.save_only_these_names())
+        body = jax.checkpoint(group_body, policy=policy)
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                     params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def forward(params: dict, cfg: ModelCfg, tokens: jax.Array,
+            positions: Optional[jax.Array] = None,
+            frontend_embeds: Optional[jax.Array] = None
+            ) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V) f32, aux_loss)."""
+    x, aux = forward_hidden(params, cfg, tokens, positions, frontend_embeds)
+    return unembed(cfg, params, x), aux
+
+
+CE_CHUNK = 512
+
+
+def chunked_ce(params: dict, cfg: ModelCfg, x: jax.Array,
+               labels: jax.Array) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks: peak logits buffer is (B, CE_CHUNK, V) —
+    at gemma2 vocab (256k) and S=4k this is 64x less temp memory, which is
+    what keeps the train_4k dry-run cells inside HBM.
+    """
+    B, S, D = x.shape
+    c = min(CE_CHUNK, S)
+    if S % c != 0:
+        logits = unembed(cfg, params, x)
+        return cross_entropy(logits, labels)
+    n = S // c
+    xc = jnp.moveaxis(x.reshape(B, n, c, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, c), 1, 0)
+
+    @jax.checkpoint  # recompute the chunk's logits in backward
+    def body(acc, inp):
+        xx, ll = inp
+        logits = unembed(cfg, params, xx)       # (B, c, V) f32
+        logits = constrain(logits, ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None],
+                                   axis=-1).squeeze(-1)
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (B * S)
+
+
+def lm_loss(params: dict, cfg: ModelCfg, batch: dict) -> jax.Array:
+    x, aux = forward_hidden(
+        params, cfg, batch["tokens"], batch.get("positions"),
+        batch.get("frontend_embeds"))
+    return chunked_ce(params, cfg, x, batch["labels"]) + 0.01 * aux
+
+
+def prefill(params: dict, cfg: ModelCfg, tokens: jax.Array,
+            positions: Optional[jax.Array] = None,
+            frontend_embeds: Optional[jax.Array] = None
+            ) -> tuple[jax.Array, dict]:
+    """Inference prefill: last-token logits + the filled decode cache."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.rope_kind == "mrope":
+            positions = jnp.broadcast_to(positions, (3, B, S))
+    x = embed_tokens(cfg, params["tok_embed"], tokens)
+    if frontend_embeds is not None:
+        x = jax.lax.dynamic_update_slice(
+            x, frontend_embeds.astype(x.dtype), (0, 0, 0))
+    x = constrain(x, ("batch", "seq", None))
+    plans = period_plan(cfg)
+
+    prefix_cache = []
+    for p, plan in zip(params.get("prefix", []), prefix_plans(cfg)):
+        x, _, kv = apply_layer(p, cfg, plan, x, positions, collect_kv=True)
+        prefix_cache.append(kv)
+
+    def group_body(x, gparams):
+        kvs = {}
+        for i, plan in enumerate(plans):
+            x, _, kv = apply_layer(gparams[f"layer_{i}"], cfg, plan, x,
+                                   positions, collect_kv=True)
+            kvs[f"layer_{i}"] = kv
+        return x, kvs
+
+    x, block_cache = jax.lax.scan(group_body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, -1:])
+    cache = {"blocks": block_cache}
+    if prefix_cache:
+        cache["prefix"] = prefix_cache
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelCfg, batch: int, max_seq: int,
+               dtype=None) -> dict:
+    """Zero cache pytree; shapes define the serve_step input_specs."""
+    dtype = dtype or dtype_of(cfg)
+    plans = period_plan(cfg)
+    G = n_groups(cfg)
+    hd = cfg.hd()
+
+    def layer_cache(plan: LayerPlan, stacked: bool):
+        lead = (G,) if stacked else ()
+        if plan.kind == "attn":
+            shp = lead + (batch, max_seq, cfg.num_kv_heads, hd)
+            c = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        elif plan.kind == "mamba":
+            shapes = mamba_mod.mamba_state_shape(cfg.hybrid, cfg.d_model,
+                                                 batch)
+            c = {k: jnp.zeros(lead + s, jnp.float32)
+                 for k, s in shapes.items()}
+        else:
+            shapes = rwkv_mod.rwkv_state_shapes(cfg, batch)
+            c = {k: jnp.zeros(lead + s, jnp.float32)
+                 for k, s in shapes.items()}
+        if plan.mlp == "cmix":
+            c["shift_c"] = jnp.zeros(lead + (batch, cfg.d_model),
+                                     jnp.float32)
+        return c
+
+    cache = {
+        "blocks": {f"layer_{i}": layer_cache(pl, True)
+                   for i, pl in enumerate(plans)},
+    }
+    pre = prefix_plans(cfg)
+    if pre:
+        cache["prefix"] = [layer_cache(pl, False) for pl in pre]
+    return cache
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelCfg,
+    tokens: jax.Array,        # (B, 1)
+    pos: jax.Array,           # scalar int32
+    cache: dict,
+) -> tuple[jax.Array, dict]:
+    """One serve step: logits for the next token + updated cache."""
+    x = embed_tokens(cfg, params["tok_embed"], tokens)
+    plans = period_plan(cfg)
+    positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+
+    new_prefix = []
+    for p, plan, c in zip(params.get("prefix", []), prefix_plans(cfg),
+                          cache.get("prefix", [])):
+        x, _, nc = apply_layer(p, cfg, plan, x, positions, cache=c, pos=pos)
+        new_prefix.append(nc)
+
+    def group_body(x, scanned):
+        gparams, gcache = scanned
+        new_gcache = {}
+        for i, plan in enumerate(plans):
+            x, _, nc = apply_layer(
+                gparams[f"layer_{i}"], cfg, plan, x, positions,
+                cache=gcache[f"layer_{i}"], pos=pos)
+            new_gcache[f"layer_{i}"] = nc
+        return x, new_gcache
+
+    x, new_blocks = jax.lax.scan(
+        group_body, x, (params["blocks"], cache["blocks"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)
+    new_cache = {"blocks": new_blocks}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    return logits, new_cache

@@ -1,0 +1,156 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: `input_specs()` feeds
+precomputed frame embeddings (B, enc_seq, D) directly into the encoder,
+which is a bidirectional transformer with learned positions.  The decoder
+adds cross-attention to every layer; decode caches both the self-attn KV and
+the (static) encoder KV.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import attention as attn_mod
+from repro.models.layers import (
+    cross_entropy,
+    dense_init,
+    dtype_of,
+    init_mlp,
+    init_norm,
+    mlp,
+    rms_norm,
+    unembed,
+)
+from repro.models.sharding import constrain
+
+
+def _init_block(key, cfg: ModelCfg, cross: bool) -> dict:
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "norm1": init_norm(cfg.d_model),
+        "attn": attn_mod.init_attention(ks[0], cfg, dtype),
+        "norm2": init_norm(cfg.d_model),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+    if cross:
+        p["norm_x"] = init_norm(cfg.d_model)
+        p["xattn"] = attn_mod.init_attention(ks[2], cfg, dtype)
+    return p
+
+
+def init_encdec(key, cfg: ModelCfg) -> dict:
+    ed = cfg.enc_dec
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], ed.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "tok_embed": dense_init(ks[2], (cfg.vocab_size, cfg.d_model), 0,
+                                dtype),
+        "pos_embed": dense_init(ks[3], (4096, cfg.d_model), 0, dtype),
+        "enc_pos_embed": dense_init(ks[4], (ed.enc_seq, cfg.d_model), 0,
+                                    dtype),
+        "encoder": [
+            _init_block(k, cfg, cross=False) for k in enc_keys],
+        "decoder": [
+            _init_block(k, cfg, cross=True) for k in dec_keys],
+        "enc_norm": init_norm(cfg.d_model),
+        "final_norm": init_norm(cfg.d_model),
+    }
+
+
+def _norm(p, name, cfg, x):
+    return rms_norm(x, p[name], cfg.norm_eps)
+
+
+def encode(params: dict, cfg: ModelCfg, enc_embeds: jax.Array) -> jax.Array:
+    """enc_embeds: (B, enc_seq, D) precomputed frame embeddings (stub)."""
+    B, S, _ = enc_embeds.shape
+    x = enc_embeds.astype(dtype_of(cfg)) + params["enc_pos_embed"][None, :S]
+    x = constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    for p in params["encoder"]:
+        h, _ = attn_mod.attention(p["attn"], cfg,
+                                  _norm(p, "norm1", cfg, x),
+                                  positions, causal=False)
+        x = x + h
+        x = x + mlp(p["mlp"], _norm(p, "norm2", cfg, x), act=jax.nn.gelu)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: dict, cfg: ModelCfg, tokens: jax.Array,
+            enc_embeds: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forced decoder pass. Returns (logits, aux=0)."""
+    enc_out = encode(params, cfg, enc_embeds)
+    B, S = tokens.shape
+    # learned positions wrap past the table size (whisper's real context is
+    # 448; the 32k assignment shapes exercise the system, not the model)
+    pe = params["pos_embed"][jnp.arange(S) % params["pos_embed"].shape[0]]
+    x = params["tok_embed"][tokens] + pe[None]
+    x = constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    for p in params["decoder"]:
+        h, _ = attn_mod.attention(p["attn"], cfg,
+                                  _norm(p, "norm1", cfg, x),
+                                  positions, causal=True)
+        x = x + h
+        kv = attn_mod.cross_kv(p["xattn"], cfg, enc_out)
+        h, _ = attn_mod.attention(p["xattn"], cfg,
+                                  _norm(p, "norm_x", cfg, x),
+                                  positions, kv=kv)
+        x = x + h
+        x = x + mlp(p["mlp"], _norm(p, "norm2", cfg, x), act=jax.nn.gelu)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), jnp.zeros((), jnp.float32)
+
+
+def encdec_loss(params: dict, cfg: ModelCfg, batch: dict) -> jax.Array:
+    logits, _ = forward(params, cfg, batch["tokens"],
+                        batch["frontend_embeds"])
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg: ModelCfg, batch: int, max_seq: int,
+               dtype=None) -> dict:
+    """Self-attn KV per decoder layer + static encoder KV per layer."""
+    dtype = dtype or dtype_of(cfg)
+    hd = cfg.hd()
+    kv = cfg.num_kv_heads
+    es = cfg.enc_dec.enc_seq
+    return {
+        "self": [
+            {"k": jnp.zeros((batch, max_seq, kv, hd), dtype),
+             "v": jnp.zeros((batch, max_seq, kv, hd), dtype)}
+            for _ in range(cfg.num_layers)],
+        "cross": [
+            {"k": jnp.zeros((batch, es, kv, hd), dtype),
+             "v": jnp.zeros((batch, es, kv, hd), dtype)}
+            for _ in range(cfg.num_layers)],
+    }
+
+
+def decode_step(params: dict, cfg: ModelCfg, tokens: jax.Array,
+                pos: jax.Array, cache: dict) -> tuple[jax.Array, dict]:
+    B = tokens.shape[0]
+    x = params["tok_embed"][tokens] + \
+        params["pos_embed"][pos % params["pos_embed"].shape[0]][None, None]
+    new_self = []
+    for p, cs, cx in zip(params["decoder"], cache["self"], cache["cross"]):
+        h, ck, cv = attn_mod.decode_attention(
+            p["attn"], cfg, _norm(p, "norm1", cfg, x), cs["k"], cs["v"],
+            pos)
+        x = x + h
+        new_self.append({"k": ck, "v": cv})
+        h, _, _ = attn_mod.decode_attention(
+            p["xattn"], cfg, _norm(p, "norm_x", cfg, x), cx["k"], cx["v"],
+            pos, cross=True)
+        x = x + h
+        x = x + mlp(p["mlp"], _norm(p, "norm2", cfg, x), act=jax.nn.gelu)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), {"self": new_self,
+                                     "cross": cache["cross"]}

@@ -1,0 +1,81 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor-block quantization of gradients before the cross-replica
+all-reduce, with an error-feedback accumulator so the quantization error is
+re-injected next step (Karimireddy et al.-style EF-SGD guarantee: same
+fixed point as uncompressed training).
+
+Used by the shard_map data-parallel trainer (launch/train.py --compress-grads):
+  g_q, new_err = compress(g + err);  g_sync = psum(decompress(g_q)) / n
+Bandwidth: 4x (f32) / 2x (bf16) reduction on the gradient all-reduce —
+at 512 chips the gradient all-reduce of a 52B model drops from ~2.9 s to
+~0.73 s of ICI time (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # quantization block (per-block scale)
+
+
+class Compressed(NamedTuple):
+    q: jax.Array        # int8 payload
+    scale: jax.Array    # f32 per-block scales
+    shape: tuple        # original shape (static)
+
+
+def _pad_len(n: int) -> int:
+    return (-n) % BLOCK
+
+
+def compress(g: jax.Array) -> tuple[Compressed, jax.Array]:
+    """Returns (compressed, error) with g ≈ decompress(compressed) + error."""
+    shape = g.shape
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.size)
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    err_full = flat - deq
+    if pad:
+        err_full = err_full[:-pad]
+    return Compressed(q, scale[:, 0], shape), err_full.reshape(shape)
+
+
+def decompress(c: Compressed) -> jax.Array:
+    deq = (c.q.astype(jnp.float32) * c.scale[:, None]).reshape(-1)
+    n = 1
+    for d in c.shape:
+        n *= d
+    return deq[:n].reshape(c.shape)
+
+
+def ef_compress_tree(grads: Any, err: Any) -> tuple[Any, Any]:
+    """Error-feedback compression over a pytree.
+
+    Returns (compressed_tree, new_err_tree); pair with `decompress_tree`
+    after the all-reduce.
+    """
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    comp, new_err = [], []
+    for g, e in zip(flat_g, flat_e):
+        c, ne = compress(g + e.astype(jnp.float32))
+        comp.append(c)
+        new_err.append(ne.astype(g.dtype))
+    return treedef.unflatten(comp), treedef.unflatten(new_err)
+
+
+def decompress_tree(comp: Any) -> Any:
+    return jax.tree.map(
+        decompress, comp, is_leaf=lambda x: isinstance(x, Compressed))
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,137 @@
+"""Fault tolerance & elasticity runtime.
+
+What runs *here* (and is unit-tested on CPU) is the control-plane logic a
+1000-node deployment needs; the data plane (actual preemption signals, ICI
+failures) is delivered by the cluster scheduler and is simulated in tests.
+
+Components
+----------
+* `StragglerWatchdog` — EWMA of step times; flags steps slower than
+  `threshold`x the moving average.  At scale the action is "report the slow
+  host to the scheduler and checkpoint"; here the action is a callback.
+* `retry_step` — retries a step function on transient failure with
+  exponential backoff (the XLA analogue of NCCL timeout-and-retry), and
+  falls back to `on_permanent` (normally: restore from checkpoint).
+* `ElasticState` — maps a checkpoint (mesh-agnostic, see checkpoint/) onto
+  a *new* mesh after a node-count change; batch is re-split by the data
+  pipeline's stateless (seed, step) addressing, so rescaling loses nothing.
+* `Heartbeat` — liveness file per host; the launcher detects dead hosts by
+  mtime, triggering the elastic path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+class StragglerWatchdog:
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
+                 warmup: int = 5,
+                 on_straggler: Optional[Callable[[int, float, float], None]]
+                 = None):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.on_straggler = on_straggler
+        self.ewma: Optional[float] = None
+        self.count = 0
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = (self.count > self.warmup and
+                dt > self.threshold * self.ewma)
+        if slow:
+            self.flagged.append((step, dt))
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ewma)
+            # do not poison the average with the outlier
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+class TransientError(RuntimeError):
+    """Raised by step functions for retryable failures (link flap, etc.)."""
+
+
+def retry_step(fn: Callable[[], Any], *, max_retries: int = 3,
+               backoff_s: float = 0.1,
+               on_permanent: Optional[Callable[[BaseException], Any]] = None,
+               sleep=time.sleep) -> Any:
+    last: Optional[BaseException] = None
+    for attempt in range(max_retries + 1):
+        try:
+            return fn()
+        except TransientError as e:  # pragma: no branch
+            last = e
+            if attempt < max_retries:
+                sleep(backoff_s * (2 ** attempt))
+    if on_permanent is not None:
+        return on_permanent(last)
+    raise last
+
+
+class Heartbeat:
+    def __init__(self, directory: str | Path, host_id: int):
+        self.path = Path(directory) / f"host_{host_id}.alive"
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    def beat(self, step: int) -> None:
+        self.path.write_text(json.dumps({"step": step, "t": time.time()}))
+
+    @staticmethod
+    def dead_hosts(directory: str | Path, timeout_s: float,
+                   now: Optional[float] = None) -> list[int]:
+        now = now or time.time()
+        dead = []
+        for p in sorted(Path(directory).glob("host_*.alive")):
+            t = json.loads(p.read_text())["t"]
+            if now - t > timeout_s:
+                dead.append(int(p.stem.split("_")[1]))
+        return dead
+
+
+@dataclasses.dataclass
+class ElasticState:
+    """Re-homes training state onto a new mesh (node count changed).
+
+    Because checkpoints store logical arrays and the data pipeline is
+    stateless, the procedure is: rebuild mesh -> recompute shardings from
+    the same logical rules -> device_put.  Works for both shrink (lost pod)
+    and grow (pod returned).
+    """
+    ckpt_dir: str
+
+    def reshard(self, tree: Any, mesh, specs) -> Any:
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda x, s: jax.device_put(np.asarray(x),
+                                        NamedSharding(mesh, s)),
+            tree, specs)
+
+    def resume(self, mesh, make_specs, target_shapes) -> tuple[int, Any]:
+        from repro.checkpoint import checkpoint as ckpt
+        step, arrays, _ = ckpt.load(self.ckpt_dir)
+        # arrays is flat {keystr: np.ndarray}; target_shapes gives pytree
+        flat = jax.tree_util.tree_flatten_with_path(target_shapes)
+        leaves, treedef = flat
+        out = []
+        specs = make_specs(target_shapes)
+        spec_leaves = treedef.flatten_up_to(specs)
+        from jax.sharding import NamedSharding
+        for (path, leaf), spec in zip(leaves, spec_leaves):
+            key = jax.tree_util.keystr(path)
+            val = arrays[key]
+            out.append(jax.device_put(val, NamedSharding(mesh, spec)))
+        return step, jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,12 @@
+import os
+import sys
+from pathlib import Path
+
+# tests see ONE device (the dry-run sets its own flags in a subprocess)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

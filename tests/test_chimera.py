@@ -1,0 +1,62 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chimera import make_chimera, make_chip_graph
+
+
+def test_chip_graph_matches_paper():
+    g = make_chip_graph()
+    assert g.n_nodes == 440                # 55 cells x 8 spins
+    assert g.n_cells == 55
+    assert g.degree().max() == 6           # 4 in-cell + 2 inter-cell
+    assert g.validate_two_coloring()
+
+
+def test_single_cell_is_k44():
+    g = make_chimera(1, 1)
+    assert g.n_nodes == 8
+    assert g.n_edges == 16                 # complete bipartite 4x4
+    deg = g.degree()
+    assert (deg == 4).all()
+
+
+def test_cell_nodes_sides():
+    g = make_chip_graph()
+    v = g.cell_nodes(0, 0, side=0)
+    h = g.cell_nodes(0, 0, side=1)
+    assert len(v) == len(h) == 4
+    adj = g.adjacency()
+    for a in v:
+        for b in h:
+            assert adj[a, b]
+    for a in v:
+        for b in v:
+            assert not adj[a, b]           # no same-side in-cell couplers
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 4), cols=st.integers(1, 4),
+       mask=st.booleans())
+def test_chimera_invariants(rows, cols, mask):
+    masked = [(rows - 1, cols - 1)] if mask and rows * cols > 1 else []
+    g = make_chimera(rows, cols, masked_cells=masked)
+    # property 1: proper 2-coloring
+    assert g.validate_two_coloring()
+    # property 2: node count
+    assert g.n_nodes == (rows * cols - len(masked)) * 8
+    # property 3: degree bound k + 2
+    assert g.degree().max() <= 6
+    # property 4: symmetric edge list without self loops
+    e = g.edges
+    assert (e[:, 0] < e[:, 1]).all()
+    # property 5: color classes are balanced
+    assert (g.color == 0).sum() == (g.color == 1).sum()
+
+
+def test_masked_cell_removes_wires():
+    g = make_chimera(2, 2, masked_cells=[(0, 1)])
+    assert g.n_nodes == 24
+    for r, c in [(0, 0), (1, 0), (1, 1)]:
+        assert len(g.cell_nodes(r, c)) == 8
+    assert len(g.cell_nodes(0, 1)) == 0

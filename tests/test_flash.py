@@ -1,0 +1,72 @@
+"""Flash attention (custom VJP) vs direct softmax oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.models.flash as F
+
+
+def direct(q, k, v, KV, scale, softcap=None, causal=True, window=None):
+    B, Sq, H, hd = q.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp, kp = jnp.arange(Sq), jnp.arange(k.shape[1])
+    d = qp[:, None] - kp[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= d >= 0
+    if window:
+        ok &= d < window
+    s = jnp.where(ok, s, -2e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p, v).reshape(B, Sq, H, hd)
+
+
+@pytest.fixture(autouse=True)
+def small_chunks(monkeypatch):
+    monkeypatch.setattr(F, "Q_CHUNK", 32)
+    monkeypatch.setattr(F, "KV_CHUNK", 16)
+
+
+@pytest.mark.parametrize("softcap,window", [
+    (None, None), (30.0, None), (None, 48), (50.0, 32)])
+def test_flash_fwd_bwd_vs_direct(softcap, window):
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd = 2, 128, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    scale = 1 / np.sqrt(hd)
+    kw = dict(num_kv_heads=KV, scale=scale, softcap=softcap, causal=True,
+              window=window)
+    o1 = F.flash_attention(q, k, v, **kw)
+    o2 = direct(q, k, v, KV, scale, softcap, True, window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+    f = lambda *a: F.flash_attention(*a, **kw).sum() * 0.01
+    g = lambda *a: direct(*a, KV, scale, softcap, True, window).sum() * 0.01
+    g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 2), nq=st.integers(1, 4), KV=st.sampled_from([1, 2]),
+       G=st.sampled_from([1, 2]), hd=st.sampled_from([8, 16]),
+       causal=st.booleans())
+def test_flash_property_shapes(B, nq, KV, G, hd, causal):
+    S = 32 * nq
+    rng = np.random.default_rng(B * nq * hd)
+    q = jnp.asarray(rng.normal(size=(B, S, KV * G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    o1 = F.flash_attention(q, k, v, num_kv_heads=KV, scale=0.25,
+                           causal=causal)
+    o2 = direct(q, k, v, KV, 0.25, None, causal, None)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)

@@ -1,0 +1,93 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pbit
+from repro.core.chimera import make_chimera, make_chip_graph
+from repro.core.hardware import (
+    HardwareConfig,
+    dac_transfer,
+    ideal_chip,
+    program_weights,
+    sample_mismatch,
+)
+from repro.core.cd import PBitMachine, quantize_codes
+
+
+def test_ideal_dac_is_identity():
+    codes = jnp.arange(-128, 128)
+    out = dac_transfer(codes, jnp.zeros((256, 8)))
+    np.testing.assert_allclose(np.asarray(out), np.arange(-128, 128))
+
+
+def test_dac_mismatch_bounded_monotonicity_break():
+    key = jax.random.PRNGKey(0)
+    err = 0.04 * jax.random.normal(key, (256, 8))
+    out = np.asarray(dac_transfer(jnp.arange(-128, 128), err))
+    # mismatch distorts but stays within ~20% of nominal full scale
+    assert np.abs(out - np.arange(-128, 128)).max() < 0.2 * 127
+
+
+def test_ideal_config_programs_exactly():
+    g = make_chimera(1, 2)
+    n = g.n_nodes
+    cfg = HardwareConfig.ideal()
+    mism = sample_mismatch(jax.random.PRNGKey(0), n, cfg)
+    J = np.zeros((n, n), np.float32)
+    J[g.edges[:, 0], g.edges[:, 1]] = 17
+    J[g.edges[:, 1], g.edges[:, 0]] = 17
+    h = np.full((n,), -9, np.float32)
+    chip = program_weights(jnp.asarray(J), jnp.asarray(h),
+                           jnp.abs(jnp.asarray(J)) > 0, mism, cfg,
+                           adjacency=jnp.asarray(g.adjacency()))
+    adj = g.adjacency()
+    np.testing.assert_allclose(np.asarray(chip.W)[adj], 17.0)
+    np.testing.assert_allclose(np.asarray(chip.h), -9.0)
+    np.testing.assert_allclose(np.asarray(chip.tanh_gain), 1.0)
+
+
+def test_mismatch_makes_W_asymmetric():
+    g = make_chimera(1, 2)
+    n = g.n_nodes
+    cfg = HardwareConfig()
+    mism = sample_mismatch(jax.random.PRNGKey(1), n, cfg)
+    J = np.zeros((n, n), np.float32)
+    J[g.edges[:, 0], g.edges[:, 1]] = 40
+    J[g.edges[:, 1], g.edges[:, 0]] = 40
+    chip = program_weights(jnp.asarray(J), jnp.zeros((n,)),
+                           jnp.abs(jnp.asarray(J)) > 0, mism, cfg,
+                           adjacency=jnp.asarray(g.adjacency()))
+    W = np.asarray(chip.W)
+    asym = np.abs(W - W.T)[g.adjacency()]
+    assert asym.max() > 0.5        # directional multiplier mismatch
+    assert np.abs(W[g.adjacency()]).mean() > 20  # still close to nominal
+
+
+def test_variability_sweep_fig8a():
+    """Bias sweep of <m> per node: ideal chip gives identical tanh curves,
+    mismatched chip gives a spread (the paper's Fig 8a)."""
+    g = make_chimera(1, 1)
+
+    def sweep(hwcfg, key):
+        machine = PBitMachine.create(g, key, hwcfg, beta=1.0, w_scale=0.02)
+        curves = []
+        for bias in [-60, -20, 0, 20, 60]:
+            chip = machine.program(
+                jnp.zeros((8, 8), jnp.int32),
+                jnp.full((8,), bias, jnp.int32))
+            m0 = pbit.random_spins(jax.random.PRNGKey(0), 128, 8)
+            ns, nf = machine.noise_fn(jax.random.PRNGKey(1), 128)
+            mean_s, _, _, _ = pbit.gibbs_stats(
+                chip, jnp.asarray(g.color), m0, 1.0, 120, 20, ns, nf,
+                jnp.asarray(g.edges))
+            curves.append(np.asarray(mean_s))
+        return np.stack(curves)           # (bias, node)
+
+    ideal = sweep(HardwareConfig.ideal(), jax.random.PRNGKey(2))
+    real = sweep(HardwareConfig(), jax.random.PRNGKey(2))
+    # ideal: all nodes identical up to sampling noise
+    assert ideal.std(axis=1).max() < 0.08
+    # mismatched: visible node-to-node spread at mid bias
+    assert real.std(axis=1).max() > ideal.std(axis=1).max()
+    # both saturate at strong bias
+    assert ideal[-1].mean() > 0.8 and ideal[0].mean() < -0.8

@@ -1,0 +1,62 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lfsr
+
+
+def test_states_never_zero_and_advance():
+    key = jax.random.PRNGKey(0)
+    s = lfsr.seed_states(key, (64,))
+    assert (np.asarray(s) != 0).all()
+    s2 = lfsr.lfsr_step_n(s, 8)
+    assert (np.asarray(s2) != np.asarray(s)).all()
+
+
+def test_byte_reversal_table():
+    b = jnp.arange(256, dtype=jnp.uint32)
+    r = lfsr.reverse_bytes_bits(b)
+    r2 = lfsr.reverse_bytes_bits(r)
+    assert (np.asarray(r2) == np.asarray(b)).all()
+    assert int(r[0b00000001]) == 0b10000000
+
+
+def test_uniformity_chi2():
+    """Bytes from the decimated LFSR should be ~uniform (chip's RNG DAC)."""
+    s = lfsr.seed_states(jax.random.PRNGKey(1), (128,))
+    counts = np.zeros(256)
+    for _ in range(200):
+        s, v, h = lfsr.next_uniforms(s, decimation=8)
+        by = np.asarray((v * 128.0 + 127.5)).astype(np.int64).reshape(-1)
+        np.add.at(counts, by, 1)
+    n = counts.sum()
+    expected = n / 256
+    chi2 = ((counts - expected) ** 2 / expected).sum()
+    # dof=255; mean 255, sd ~22.6 — allow 6 sigma
+    assert chi2 < 255 + 6 * 22.6, chi2
+
+
+def test_reversed_sequence_correlation_benign():
+    """Paper: horizontal nodes reuse bit-reversed bytes; claims no
+    degradation.  Check the two streams are weakly correlated."""
+    s = lfsr.seed_states(jax.random.PRNGKey(2), (256,))
+    vs, hs = [], []
+    for _ in range(100):
+        s, v, h = lfsr.next_uniforms(s)
+        vs.append(np.asarray(v).reshape(-1))
+        hs.append(np.asarray(h).reshape(-1))
+    v = np.concatenate(vs)
+    h = np.concatenate(hs)
+    corr = np.corrcoef(v, h)[0, 1]
+    assert abs(corr) < 0.05, corr
+
+
+def test_period_smoke():
+    """A maximal 32-bit Galois LFSR must not cycle within 10^4 steps."""
+    s = jnp.asarray([jnp.uint32(0xACE1)])
+    seen = set()
+    for _ in range(10_000):
+        s = lfsr.lfsr_step(s)
+        v = int(s[0])
+        assert v not in seen
+        seen.add(v)

@@ -1,0 +1,102 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy, pbit
+from repro.core.chimera import make_chimera
+from repro.core.hardware import HardwareConfig, ideal_chip
+
+
+def _small_problem(seed=0, beta=1.0):
+    g = make_chimera(1, 1)
+    rng = np.random.default_rng(seed)
+    J = np.zeros((8, 8), np.float32)
+    vals = rng.normal(size=g.n_edges) * 0.7
+    J[g.edges[:, 0], g.edges[:, 1]] = vals
+    J[g.edges[:, 1], g.edges[:, 0]] = vals
+    h = (rng.normal(size=8) * 0.3).astype(np.float32)
+    return g, J, h
+
+
+def test_gibbs_matches_exact_boltzmann():
+    g, J, h = _small_problem()
+    chip = ideal_chip(J, h, jnp.asarray(g.adjacency()))
+    m0 = pbit.random_spins(jax.random.PRNGKey(0), 512, 8)
+    noise = pbit.make_philox_noise(512, 8)
+    betas = jnp.ones((400,), jnp.float32)
+    _, _, traj = pbit.gibbs_sample(
+        chip, jnp.asarray(g.color), m0, betas, jax.random.PRNGKey(1),
+        noise, collect=True)
+    samples = np.asarray(traj[100:]).reshape(-1, 8)
+    emp = energy.empirical_visible_dist(samples, np.arange(8))
+    exact = energy.exact_boltzmann(J, h, 1.0)
+    assert energy.kl_divergence(exact, emp) < 0.05
+
+
+def test_gibbs_lfsr_noise_matches_boltzmann():
+    """The chip's LFSR noise path samples the same distribution."""
+    g, J, h = _small_problem(1)
+    chip = ideal_chip(J, h, jnp.asarray(g.adjacency()))
+    init, noise = pbit.make_lfsr_noise(g, 512)
+    state = init(jax.random.PRNGKey(2))
+    m0 = pbit.random_spins(jax.random.PRNGKey(0), 512, 8)
+    betas = jnp.ones((400,), jnp.float32)
+    _, _, traj = pbit.gibbs_sample(
+        chip, jnp.asarray(g.color), m0, betas, state, noise, collect=True)
+    samples = np.asarray(traj[100:]).reshape(-1, 8)
+    emp = energy.empirical_visible_dist(samples, np.arange(8))
+    exact = energy.exact_boltzmann(J, h, 1.0)
+    assert energy.kl_divergence(exact, emp) < 0.08
+
+
+def test_clamped_nodes_stay_fixed():
+    g, J, h = _small_problem()
+    chip = ideal_chip(J, h, jnp.asarray(g.adjacency()))
+    clamp_mask = jnp.zeros((8,), bool).at[jnp.array([0, 3])].set(True)
+    clamp_values = jnp.tile(jnp.array([1.0, -0, -0, -1.0, 0, 0, 0, 0]),
+                            (64, 1))
+    m0 = pbit.random_spins(jax.random.PRNGKey(0), 64, 8)
+    noise = pbit.make_philox_noise(64, 8)
+    m, _, traj = pbit.gibbs_sample(
+        chip, jnp.asarray(g.color), m0, jnp.ones((50,)),
+        jax.random.PRNGKey(1), noise,
+        clamp_mask=clamp_mask, clamp_values=clamp_values, collect=True)
+    t = np.asarray(traj)
+    assert (t[:, :, 0] == 1.0).all()
+    assert (t[:, :, 3] == -1.0).all()
+
+
+def test_high_beta_finds_ground_state():
+    g, J, h = _small_problem(3)
+    chip = ideal_chip(J, h, jnp.asarray(g.adjacency()))
+    m0 = pbit.random_spins(jax.random.PRNGKey(0), 128, 8)
+    noise = pbit.make_philox_noise(128, 8)
+    betas = jnp.linspace(0.1, 6.0, 300)
+    m, _, _ = pbit.gibbs_sample(
+        chip, jnp.asarray(g.color), m0, betas, jax.random.PRNGKey(4),
+        noise)
+    e = np.asarray(energy.ising_energy(jnp.asarray(m), jnp.asarray(J),
+                                       jnp.asarray(h)))
+    exact = energy.exact_boltzmann(J, h, 1.0)
+    s = energy.all_states(8)
+    e_min = float(np.min(np.asarray(
+        energy.ising_energy(jnp.asarray(s), jnp.asarray(J),
+                            jnp.asarray(h)))))
+    assert e.min() == pytest.approx(e_min, abs=1e-5)
+    assert np.mean(e == e_min) > 0.3       # most chains anneal to ground
+
+
+def test_gibbs_stats_match_trajectory_stats():
+    g, J, h = _small_problem(4)
+    chip = ideal_chip(J, h, jnp.asarray(g.adjacency()))
+    edges = jnp.asarray(g.edges)
+    m0 = pbit.random_spins(jax.random.PRNGKey(0), 256, 8)
+    noise = pbit.make_philox_noise(256, 8)
+    mean_s, mean_c, _, _ = pbit.gibbs_stats(
+        chip, jnp.asarray(g.color), m0, 1.0, 300, 50,
+        jax.random.PRNGKey(1), noise, edges)
+    exact = energy.exact_boltzmann(J, h, 1.0)
+    s = energy.all_states(8)
+    exact_mean = (exact[:, None] * s).sum(0)
+    np.testing.assert_allclose(np.asarray(mean_s), exact_mean, atol=0.06)

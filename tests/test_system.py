@@ -1,0 +1,137 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Covers: full-adder learning (Fig 8b), SK annealing (Fig 9a), Max-Cut
+(Fig 9b), the generalized hardware-aware QAT path, and a short real
+training run through the production train step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCfg
+from repro.configs.registry import get_reduced_config
+from repro.core import tasks
+from repro.core.annealing import AnnealConfig, anneal, sk_instance
+from repro.core.cd import CDConfig, PBitMachine, train_cd
+from repro.core.chimera import make_chimera, make_chip_graph
+from repro.core.hardware import HardwareConfig
+from repro.core.hwaware import HwAwareConfig, apply_hardware
+from repro.core.maxcut import random_chimera_maxcut, solve_maxcut
+from repro.data.pipeline import DataConfig, make_source
+from repro.launch import mesh as mesh_mod
+from repro.launch.steps import make_train_step
+from repro.models.model import build_model
+from repro.optim import adamw
+
+
+def test_full_adder_learning_under_mismatch():
+    """Paper Fig 8b: 5-visible full adder over two chimera cells."""
+    g = make_chimera(1, 2)
+    machine = PBitMachine.create(g, jax.random.PRNGKey(9),
+                                 HardwareConfig(), beta=1.0, w_scale=0.05)
+    task = tasks.full_adder_task(g, cells=((0, 0), (0, 1)))
+    cfg = CDConfig(lr=6.0, cd_k=15, pos_sweeps=15, burn_in=3, chains=256,
+                   epochs=100)
+    res = train_cd(machine, task.visible_idx, task.target_dist, cfg,
+                   jax.random.PRNGKey(1), eval_every=25)
+    kls = [k for _, k in res.kl_history]
+    # learning proceeds (Fig 8b): final KL well below the uniform baseline
+    # KL(target || uniform over 2^5) = log(32/8) = 1.386
+    assert kls[-1] < 1.2, kls
+    assert min(kls) == kls[-1] or kls[-1] < kls[0], kls
+
+
+def test_sk_annealing_energy_decreases():
+    """Paper Fig 9a on the real 440-spin chip graph."""
+    g = make_chip_graph()
+    machine = PBitMachine.create(g, jax.random.PRNGKey(3),
+                                 HardwareConfig(), beta=1.0, w_scale=0.02)
+    J, h = sk_instance(g, jax.random.PRNGKey(4))
+    out = anneal(machine, J, h,
+                 AnnealConfig(n_sweeps=300, beta_start=0.02, beta_end=2.0,
+                              chains=32),
+                 jax.random.PRNGKey(5), record_every=30)
+    e = out["energy_mean"]
+    assert e[-1] < e[0] * 1.05 and e[-1] < 0
+    assert out["best_energy"] <= e[-1]
+
+
+def test_maxcut_beats_random():
+    """Paper Fig 9b: annealed cut >> random cut, near the edge-count UB."""
+    g = make_chip_graph()
+    machine = PBitMachine.create(g, jax.random.PRNGKey(0),
+                                 HardwareConfig(), beta=1.0, w_scale=0.03)
+    prob = random_chimera_maxcut(g, jax.random.PRNGKey(1), edge_prob=0.8)
+    out = solve_maxcut(machine, prob,
+                       AnnealConfig(n_sweeps=300, beta_start=0.05,
+                                    beta_end=3.0, chains=32),
+                       jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    rand_cut = max(
+        prob.cut_value(rng.choice([-1.0, 1.0], size=g.n_nodes))
+        for _ in range(32))
+    assert out["cut_polished"] > rand_cut * 1.15
+    assert out["cut_polished"] >= out["cut"]
+    assert out["cut_polished"] <= out["upper_bound"]
+
+
+def test_hwaware_qat_transform():
+    cfg = get_reduced_config("gemma2-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    hw = HwAwareConfig(bits=8, sigma_gain=0.05, min_size=16)
+    qparams = apply_hardware(params, hw, jax.random.PRNGKey(1))
+    # embeddings untouched, big matrices quantized+gained
+    same = np.array_equal(np.asarray(params["tok_embed"]),
+                          np.asarray(qparams["tok_embed"]))
+    assert same
+    flat1 = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat2 = jax.tree.leaves(qparams)
+    changed = sum(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for (_, a), b in zip(flat1, flat2))
+    assert changed > 5
+
+
+def test_hwaware_training_step_decreases_loss():
+    """The generalized in-situ learning: optimize THROUGH the hardware
+    model; loss on the 'hardware' forward decreases."""
+    cfg = get_reduced_config("gemma2-2b")
+    shape = ShapeCfg("t", 64, 4, "train")
+    mesh = mesh_mod.make_host_mesh(1, 1)
+    hw = HwAwareConfig(bits=8, sigma_gain=0.05, min_size=256)
+    step = make_train_step(
+        cfg, shape, mesh,
+        adamw.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=50),
+        hw_aware=hw)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    src = make_source(DataConfig(seed=0, vocab_size=cfg.vocab_size))
+    losses = []
+    for s in range(15):
+        batch = src.batch(s, 4, 64)
+        params, opt, m = step.fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_microbatched_step_matches_full_batch():
+    cfg = get_reduced_config("deepseek-67b")
+    shape = ShapeCfg("t", 32, 8, "train")
+    mesh = mesh_mod.make_host_mesh(1, 1)
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0)
+    model = build_model(cfg)
+    src = make_source(DataConfig(seed=0, vocab_size=cfg.vocab_size))
+    batch = src.batch(0, 8, 32)
+
+    outs = []
+    for mb in (1, 4):
+        step = make_train_step(cfg, shape, mesh, ocfg, microbatches=mb)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        p, o, m = step.fn(params, opt, batch)
+        outs.append((float(m["loss"]), float(m["grad_norm"])))
+    assert outs[0][0] == pytest.approx(outs[1][0], rel=1e-3)
+    assert outs[0][1] == pytest.approx(outs[1][1], rel=2e-2)

@@ -1,0 +1,54 @@
+"""Parallel tempering (beyond-paper optimization feature)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.annealing import AnnealConfig, anneal, sk_instance
+from repro.core.cd import CDConfig, PBitMachine, train_cd
+from repro.core.chimera import make_chimera
+from repro.core.hardware import HardwareConfig
+from repro.core.tempering import PTConfig, beta_ladder, parallel_tempering
+from repro.core import tasks
+
+
+def test_beta_ladder_geometric():
+    cfg = PTConfig(n_replicas=5, beta_min=0.1, beta_max=1.6)
+    b = np.asarray(beta_ladder(cfg))
+    assert b[0] == 0.1 and abs(b[-1] - 1.6) < 1e-6
+    ratios = b[1:] / b[:-1]
+    np.testing.assert_allclose(ratios, ratios[0], rtol=1e-5)
+
+
+def test_pt_finds_lower_or_equal_energy_than_sa():
+    g = make_chimera(3, 3)
+    machine = PBitMachine.create(g, jax.random.PRNGKey(0),
+                                 HardwareConfig(), w_scale=0.02)
+    J, h = sk_instance(g, jax.random.PRNGKey(1))
+    sa = anneal(machine, J, h,
+                AnnealConfig(n_sweeps=300, beta_start=0.05, beta_end=3.0,
+                             chains=16),
+                jax.random.PRNGKey(2))
+    pt = parallel_tempering(machine, J, h,
+                            PTConfig(n_replicas=16, n_sweeps=300,
+                                     swap_every=10),
+                            jax.random.PRNGKey(2))
+    # healthy replica exchange and competitive energy
+    assert 0.05 < pt["swap_rate"] <= 1.0
+    assert pt["best_energy"] <= sa["best_energy"] * 0.93 + 1e-9 or \
+        pt["best_energy"] <= sa["best_energy"] + abs(
+            sa["best_energy"]) * 0.07
+
+
+def test_pcd_momentum_smoke():
+    """PCD + momentum trains without divergence (quality parity is
+    scale-dependent; see EXPERIMENTS §Perf extensions)."""
+    g = make_chimera(1, 1)
+    machine = PBitMachine.create(g, jax.random.PRNGKey(0),
+                                 HardwareConfig(), w_scale=0.05)
+    task = tasks.and_gate_task(g)
+    cfg = CDConfig(lr=3.0, cd_k=10, pos_sweeps=10, chains=128, epochs=30,
+                   persistent=True, momentum=0.5)
+    res = train_cd(machine, task.visible_idx, task.target_dist, cfg,
+                   jax.random.PRNGKey(1), eval_every=30)
+    assert np.isfinite(res.kl_history[-1][1])
+    assert np.abs(res.Jm).max() <= 127.0
