@@ -1,52 +1,158 @@
-"""Pallas kernel microbenchmark: fused half-sweep vs unfused jnp reference.
+"""Pallas kernel microbenchmark: sweep-resident fused engine vs unfused.
 
-On CPU both run through XLA/interpreter so wall time is not the TPU story;
-the figure of merit reported is the *HBM traffic model* of fused vs unfused
-(the kernel's reason to exist) plus correctness-checked call timing.
+Times the real kernels (CPU interpret mode — the TPU story is projected
+from the HBM traffic + roofline model) and writes the perf trajectory to
+``BENCH_kernel.json`` at the repo root so regressions across PRs are
+visible in review diffs.
+
+Reported per configuration:
+  * measured CPU-interpret wall time, sweeps/sec and flips/ns for the jnp
+    reference, the per-half-sweep Pallas kernel, and the fused engine at
+    S=1 and S=S_RESIDENT sweeps per launch;
+  * the modeled HBM bytes/sweep for each path and the fused-vs-half-sweep
+    traffic reduction (the kernel's reason to exist);
+  * projected TPU v5e sweeps/sec from the max(HBM-bound, MXU-bound) time.
+
+Usage: python benchmarks/bench_kernel.py [--quick]
 """
 from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_json, timer
-from repro.kernels.ops import ref_half_sweep
 from repro.kernels.pbit_update import pbit_half_sweep_pallas
 from repro.kernels.ref import pbit_half_sweep_ref
+from repro.kernels.sweep_fused import sweep_fused_pallas
+from repro.launch.mesh import HBM_BW
+from repro.launch.mesh import PEAK_FLOPS_BF16 as PEAK_FLOPS
+
+S_RESIDENT = 16
 
 
-def run() -> dict:
-    rng = np.random.default_rng(0)
-    B, N = 256, 2048
-    m = jnp.asarray((rng.integers(0, 2, (B, N)) * 2 - 1), jnp.float32)
-    W = jnp.asarray(rng.normal(size=(N, N)) * 0.05, jnp.float32)
-    vecs = [jnp.asarray(rng.normal(size=N), jnp.float32) for _ in range(5)]
-    mask = jnp.asarray(rng.integers(0, 2, N).astype(bool))
-    u = jnp.asarray(rng.uniform(-1, 1, (B, N)), jnp.float32)
-
-    ref = jax.jit(lambda *a: pbit_half_sweep_ref(*a))
-    t_ref = timer(ref, m, W, *vecs, mask, 0.7, u)
-
-    # HBM traffic model (bytes), fused vs unfused chain of 5 elementwise ops
-    w_bytes = N * N * 4
-    act = B * N * 4
-    unfused = w_bytes + act * 2 + 5 * 2 * act   # matmul + 5 rw passes
-    fused = w_bytes + act * 3                   # m, u in; out
-    out = {
-        "B": B, "N": N,
-        "cpu_ref_us": t_ref * 1e6,
-        "hbm_bytes_unfused": unfused,
-        "hbm_bytes_fused": fused,
-        "traffic_reduction": unfused / fused,
-        "projected_tpu_us_fused": fused / 819e9 * 1e6,
-        "projected_tpu_us_unfused": unfused / 819e9 * 1e6,
+def traffic_model(B: int, N: int, S: int) -> dict:
+    """Modeled HBM bytes per full sweep for each execution path."""
+    w = N * N * 4
+    a = B * N * 4
+    # jnp reference: matmul (W + m in + I out) then a ~5-op elementwise
+    # chain re-reading/writing activations, twice per sweep (two colors),
+    # plus host noise generation (write + read u)
+    ref = 2 * (w + 2 * a + 5 * 2 * a) + 2 * 2 * a
+    # per-half-sweep Pallas kernel: fused elementwise, but spins + noise
+    # still cross HBM every half-sweep (m in, u in, m out) and noise is
+    # generated outside the kernel (u write)
+    half = 2 * (w + 3 * a) + 2 * a
+    # fused S-sweep resident engine: W + spins in/out once per S sweeps;
+    # noise never leaves the kernel; betas are S*B*4 per launch
+    fused = (w + 2 * a) / S + B * 4
+    return {
+        "hbm_bytes_per_sweep_ref": ref,
+        "hbm_bytes_per_sweep_halfsweep": half,
+        "hbm_bytes_per_sweep_fused": fused,
+        "traffic_reduction_vs_halfsweep": half / fused,
+        "traffic_reduction_vs_ref": ref / fused,
     }
-    save_json("kernel_pbit_update", out)
-    emit("kernel_pbit_halfsweep_ref", t_ref * 1e6,
-         f"traffic_x{out['traffic_reduction']:.2f}")
+
+
+def projected_tpu_sweeps_per_sec(B: int, N: int, bytes_per_sweep: float
+                                 ) -> float:
+    flops_per_sweep = 2 * 2 * B * N * N  # two half-sweep matmuls
+    t = max(bytes_per_sweep / HBM_BW, flops_per_sweep / PEAK_FLOPS)
+    return 1.0 / t
+
+
+def bench_config(B: int, N: int, iters: int = 3) -> dict:
+    rng = np.random.default_rng(0)
+    m = jnp.asarray(rng.integers(0, 2, (B, N)) * 2 - 1, jnp.float32)
+    W = jnp.asarray(rng.normal(size=(N, N)) * 0.05, jnp.float32)
+    h, g, o, rg, co = (jnp.asarray(rng.normal(size=N), jnp.float32)
+                       for _ in range(5))
+    g = 1.0 + 0.05 * g
+    color = rng.integers(0, 2, N)
+    mask0, mask1 = jnp.asarray(color == 0), jnp.asarray(color == 1)
+    u = jnp.asarray(rng.uniform(-1, 1, (B, N)), jnp.float32)
+    seedctr = jnp.asarray([1234, 0], jnp.uint32)
+
+    out = {"B": B, "N": N, "S_resident": S_RESIDENT}
+    out.update(traffic_model(B, N, S_RESIDENT))
+
+    # -- jnp reference half-sweep (x2 per sweep)
+    ref = jax.jit(lambda *a: pbit_half_sweep_ref(*a))
+    t_ref = timer(ref, m, W, h, g, o, rg, co, mask0, 0.7, u, iters=iters)
+    out["cpu_ref_half_us"] = t_ref * 1e6
+    out["cpu_ref_sweeps_per_sec"] = 1.0 / (2 * t_ref)
+
+    # -- per-half-sweep Pallas kernel (interpret mode on CPU)
+    t_half = timer(
+        lambda: pbit_half_sweep_pallas(m, W, h, g, o, rg, co, mask0, 0.7, u,
+                                       interpret=True), iters=iters)
+    out["cpu_halfsweep_kernel_us"] = t_half * 1e6
+    out["cpu_halfsweep_sweeps_per_sec"] = 1.0 / (2 * t_half)
+
+    # -- fused engine, 1 sweep and S_RESIDENT sweeps per launch
+    for S in (1, S_RESIDENT):
+        betas = jnp.full((S, B), 0.7, jnp.float32)
+        t = timer(
+            lambda b=betas: sweep_fused_pallas(
+                m, W, h, g, o, rg, co, mask0, mask1, b, seedctr,
+                noise_mode="counter", interpret=True)[0],
+            iters=iters)
+        key = "fused_s1" if S == 1 else f"fused_s{S}"
+        sweeps_per_sec = S / t
+        out[f"cpu_{key}_us_per_launch"] = t * 1e6
+        out[f"cpu_{key}_sweeps_per_sec"] = sweeps_per_sec
+        out[f"cpu_{key}_flips_per_ns"] = sweeps_per_sec * B * N * 1e-9
+
+    _add_tpu_projection(B, N, out)
     return out
 
 
+def _add_tpu_projection(B: int, N: int, out: dict) -> None:
+    for key in ("halfsweep", "fused"):
+        sps = projected_tpu_sweeps_per_sec(
+            B, N, out[f"hbm_bytes_per_sweep_{key}"])
+        out[f"tpu_projected_{key}_sweeps_per_sec"] = sps
+        out[f"tpu_projected_{key}_flips_per_ns"] = sps * B * N * 1e-9
+
+
+def run(quick: bool = False) -> dict:
+    # chip scale is always measured; the paper-chip N=440 rounds to 512
+    # lanes in-kernel.  The production-scale config is traffic-model only
+    # in quick mode (interpret-mode matmuls at N=2048 take minutes).
+    results = {"configs": []}
+    results["configs"].append(bench_config(64 if quick else 256, 440,
+                                           iters=1 if quick else 3))
+    big = {"B": 256, "N": 2048, "S_resident": S_RESIDENT}
+    big.update(traffic_model(256, 2048, S_RESIDENT))
+    big["traffic_reduction_s1_vs_halfsweep"] = (
+        traffic_model(256, 2048, 1)["traffic_reduction_vs_halfsweep"])
+    _add_tpu_projection(256, 2048, big)
+    results["configs"].append(big)
+
+    chip = results["configs"][0]
+    emit("kernel_fused_s16_cpu", chip["cpu_fused_s16_us_per_launch"],
+         f"sweeps/s={chip['cpu_fused_s16_sweeps_per_sec']:.1f}")
+    emit("kernel_traffic_reduction_B256_N2048",
+         big["traffic_reduction_vs_halfsweep"],
+         f"s1={big['traffic_reduction_s1_vs_halfsweep']:.2f}x")
+
+    save_json("kernel_pbit_update", results)
+    if not quick:
+        # perf trajectory tracked across PRs at the repo root; --quick runs
+        # (CI smoke) use incomparable shapes and must not overwrite it
+        root = Path(__file__).resolve().parent.parent / "BENCH_kernel.json"
+        root.write_text(json.dumps(results, indent=1))
+    return results
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / single iteration (CI smoke)")
+    args = ap.parse_args()
+    run(quick=args.quick)

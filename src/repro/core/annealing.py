@@ -71,7 +71,7 @@ def anneal(
 
     _, _, traj = pbit.gibbs_sample(
         chip, jnp.asarray(g.color), m0, betas, noise_state, noise_fn,
-        collect=True)
+        collect=True, backend=machine.backend)
     Jf = jnp.asarray(J_codes, jnp.float32)
     hf = jnp.asarray(h_codes, jnp.float32)
     sel = np.arange(0, cfg.n_sweeps, record_every)

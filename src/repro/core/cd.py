@@ -48,7 +48,8 @@ class PBitMachine:
     hw: HardwareConfig
     mismatch: Mismatch
     beta: float = 1.0
-    noise: str = "philox"  # or "lfsr"
+    noise: str = "philox"   # "philox" | "counter" | "lfsr"
+    backend: str = "auto"   # sampling backend: auto | ref | pallas | fused
     w_scale: float = 0.05  # weight-LSB -> coupling units (ext. resistor knob)
 
     @staticmethod
@@ -74,6 +75,9 @@ class PBitMachine:
     def noise_fn(self, key: jax.Array, batch: int):
         if self.noise == "lfsr":
             init, step = pbit.make_lfsr_noise(self.graph, batch)
+            return init(key), step
+        if self.noise == "counter":
+            init, step = pbit.make_counter_noise(batch, self.graph.n_nodes)
             return init(key), step
         return key, pbit.make_philox_noise(batch, self.graph.n_nodes)
 
@@ -104,7 +108,8 @@ def _phase_stats(machine, chip, color, edges, m0, n_sweeps, burn_in,
     return pbit.gibbs_stats(
         chip, color, m0, machine.beta, n_sweeps, burn_in,
         noise_state, noise_fn, edges,
-        clamp_mask=clamp_mask, clamp_values=clamp_values)
+        clamp_mask=clamp_mask, clamp_values=clamp_values,
+        backend=machine.backend)
 
 
 def make_cd_step(machine: PBitMachine, cfg: CDConfig,
@@ -181,7 +186,7 @@ def sample_visible_dist(machine: PBitMachine, Jm, hm,
     betas = jnp.full((sweeps,), machine.beta, jnp.float32)
     _, _, traj = pbit.gibbs_sample(
         chip, jnp.asarray(g.color), m0, betas, noise_state, noise_fn,
-        collect=True)
+        collect=True, backend=machine.backend)
     samples = np.asarray(traj[burn_in:]).reshape(-1, g.n_nodes)
     return energy_mod.empirical_visible_dist(samples, visible_idx)
 

@@ -62,10 +62,61 @@ def byte_to_uniform(b: jax.Array) -> jax.Array:
     return (b.astype(jnp.float32) - 127.5) / 128.0
 
 
+def reverse_byte_bits_swar(b: jax.Array) -> jax.Array:
+    """Bit-reverse each byte with shift/mask ops only (no table gather).
+
+    Equivalent to ``reverse_bytes_bits`` but kernel-friendly: inside a Pallas
+    TPU kernel a 256-entry table lookup is a gather, while this is three VPU
+    shift/or rounds.  Used by the fused sweep engine's in-kernel LFSR.
+    """
+    b = ((b & jnp.uint32(0xF0)) >> jnp.uint32(4)) | \
+        ((b & jnp.uint32(0x0F)) << jnp.uint32(4))
+    b = ((b & jnp.uint32(0xCC)) >> jnp.uint32(2)) | \
+        ((b & jnp.uint32(0x33)) << jnp.uint32(2))
+    b = ((b & jnp.uint32(0xAA)) >> jnp.uint32(1)) | \
+        ((b & jnp.uint32(0x55)) << jnp.uint32(1))
+    return b
+
+
 def cell_uniforms(state: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Per-cell uniforms for (vertical[..., 4], horizontal[..., 4]) nodes."""
     by = cell_bytes(state)
     return byte_to_uniform(by), byte_to_uniform(reverse_bytes_bits(by))
+
+
+def flat_cell_uniforms(state: jax.Array) -> jax.Array:
+    """Uniforms in the flat byte-major layout [v0..v3, h0..h3] x cells.
+
+    state: uint32[..., C].  Returns float32[..., 8*C] where column
+    ``k*C + cell`` is vertical byte k of ``cell`` and ``(4+k)*C + cell`` is
+    the bit-reversed (horizontal) byte k.  Built from 2-D shift/mask ops only
+    so the same code runs inside the fused Pallas kernel.
+    """
+    parts = []
+    for k in range(4):
+        b = (state >> jnp.uint32(8 * k)) & jnp.uint32(0xFF)
+        parts.append(byte_to_uniform(b))
+    for k in range(4):
+        b = (state >> jnp.uint32(8 * k)) & jnp.uint32(0xFF)
+        parts.append(byte_to_uniform(reverse_byte_bits_swar(b)))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def node_gather_perm(vert_scatter, horiz_scatter, n_nodes: int) -> np.ndarray:
+    """Inverse permutation: node id -> column of ``flat_cell_uniforms``.
+
+    One precomputed gather replaces the two dynamic-update scatters the old
+    ``lfsr_uniform_for_graph`` issued per noise step.
+    """
+    vert = np.asarray(vert_scatter)
+    horiz = np.asarray(horiz_scatter)
+    n_cells, k = vert.shape
+    perm = np.zeros(n_nodes, dtype=np.int32)
+    cells = np.arange(n_cells, dtype=np.int32)
+    for kk in range(k):
+        perm[vert[:, kk]] = kk * n_cells + cells
+        perm[horiz[:, kk]] = (k + kk) * n_cells + cells
+    return perm
 
 
 def next_uniforms(state: jax.Array, decimation: int = 8
@@ -87,18 +138,66 @@ def lfsr_uniform_for_graph(
     horiz_scatter: jax.Array,
     n_nodes: int,
     decimation: int = 8,
+    gather_perm: np.ndarray | jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Produce per-node uniforms for a Chimera graph.
 
     state: uint32[..., n_cells]; *_scatter: int32[n_cells, 4] node ids
     (vertical / horizontal nodes of each cell, compacted numbering).
     Returns (new_state, u[..., n_nodes]).
+
+    One ``take`` with the precomputed inverse permutation replaces the old
+    pair of ``.at[...].set`` scatters (each of which materialized a fresh
+    (..., n_nodes) buffer per noise step).  Pass ``gather_perm`` (from
+    ``node_gather_perm``) to skip rebuilding it per call.
     """
-    state, v, h = next_uniforms(state, decimation)
-    batch = state.shape[:-1]
-    u = jnp.zeros(batch + (n_nodes,), dtype=jnp.float32)
-    u = u.at[..., vert_scatter.reshape(-1)].set(
-        v.reshape(batch + (-1,)))
-    u = u.at[..., horiz_scatter.reshape(-1)].set(
-        h.reshape(batch + (-1,)))
+    state = lfsr_step_n(state, decimation)
+    if gather_perm is None:
+        # traceable fallback (scatter tables may be traced jax arrays);
+        # precompute with node_gather_perm + pass gather_perm to skip it
+        n_cells, k = vert_scatter.shape
+        cols = jnp.arange(n_cells, dtype=jnp.int32)
+        gather_perm = jnp.zeros((n_nodes,), jnp.int32)
+        for kk in range(k):
+            gather_perm = gather_perm.at[vert_scatter[:, kk]].set(
+                kk * n_cells + cols)
+            gather_perm = gather_perm.at[horiz_scatter[:, kk]].set(
+                (k + kk) * n_cells + cols)
+    flat = flat_cell_uniforms(state)
+    u = jnp.take(flat, jnp.asarray(gather_perm), axis=-1)
     return state, u
+
+
+# ---------------------------------------------------------------------------
+# Counter-based (stateless) RNG — the fused kernel's "scale mode" noise
+# ---------------------------------------------------------------------------
+def mix32(x: jax.Array) -> jax.Array:
+    """Avalanche finalizer (lowbias32 constants). uint32 -> uint32."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def counter_bits(seed: jax.Array, ctr: jax.Array,
+                 row: jax.Array, col: jax.Array) -> jax.Array:
+    """Stateless hash of (seed, step counter, chain row, node col) -> uint32.
+
+    Pure uint32 shift/mul/xor arithmetic: the identical expression runs on
+    the host (reference path) and inside the fused Pallas kernel, so the two
+    are bit-exact by construction.
+    """
+    x = mix32(jnp.uint32(seed) ^ (jnp.uint32(ctr) * jnp.uint32(0x9E3779B9)))
+    x = mix32(x
+              ^ (row.astype(jnp.uint32) * jnp.uint32(0x85EBCA77))
+              ^ (col.astype(jnp.uint32) * jnp.uint32(0xC2B2AE3D)))
+    return x
+
+
+def counter_uniform(seed: jax.Array, ctr: jax.Array,
+                    row: jax.Array, col: jax.Array) -> jax.Array:
+    """Counter-mode uniform in (-1, 1), quantized like the 8-bit RNG DAC."""
+    return byte_to_uniform(counter_bits(seed, ctr, row, col)
+                           & jnp.uint32(0xFF))

@@ -16,10 +16,20 @@ fresh noise.  Each half-sweep is one (B, N) x (N, N) matmul — MXU food.
 non-ideality is in the loop; with `HardwareConfig.ideal()` it reduces to the
 textbook equations, which tests/test_pbit.py verifies against exact
 enumeration of the Boltzmann distribution.
+
+Execution backends (see docs/kernels.md):
+  * "ref"    — pure jnp chromatic half-sweeps under `lax.scan` (default).
+  * "pallas" — the tiled per-half-sweep Pallas kernel (kernels/pbit_update).
+  * "fused"  — the sweep-resident engine (kernels/sweep_fused): S sweeps per
+               kernel launch, spins in VMEM, noise generated in-kernel, CD
+               moments accumulated on-line.  Needs "counter" or "lfsr" noise.
+Selected per call via the ``backend=`` argument, or globally via the
+REPRO_PBIT_BACKEND environment variable (used when backend is None/"auto").
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Callable, NamedTuple
 
 import jax
@@ -32,13 +42,38 @@ from repro.core.hardware import EffectiveChip
 
 NoiseFn = Callable[[jax.Array], tuple[jax.Array, jax.Array]]
 
+BACKENDS = ("ref", "pallas", "fused")
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Map None/"auto" to the env default; validate explicit choices."""
+    if backend in (None, "auto"):
+        backend = os.environ.get("REPRO_PBIT_BACKEND", "ref")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+    return backend
+
+
+class NoiseSpec(NamedTuple):
+    """Static description of a noise source, attached to step fns as
+    ``step.spec`` so the fused kernel can regenerate the same stream
+    in-kernel (see kernels/sweep_fused.py)."""
+
+    kind: str                        # "philox" | "counter" | "lfsr"
+    decimation: int = 8
+    gather_perm: tuple | None = None  # node -> flat LFSR column (static)
+
 
 # ---------------------------------------------------------------------------
 # Noise sources
 # ---------------------------------------------------------------------------
 def make_philox_noise(batch: int, n_nodes: int, quantize: bool = True
                       ) -> NoiseFn:
-    """Counter-based noise (scale mode): state is a PRNG key."""
+    """Host-side counter noise (scale mode): state is a PRNG key.
+
+    Not reproducible inside the fused kernel — use `make_counter_noise` for
+    a bit-exact host/kernel pair.
+    """
 
     def step(key: jax.Array) -> tuple[jax.Array, jax.Array]:
         key, sub = jax.random.split(key)
@@ -50,7 +85,32 @@ def make_philox_noise(batch: int, n_nodes: int, quantize: bool = True
                 sub, (batch, n_nodes), minval=-1.0, maxval=1.0)
         return key, u
 
+    step.spec = NoiseSpec(kind="philox")
     return step
+
+
+def make_counter_noise(batch: int, n_nodes: int
+                       ) -> tuple[Callable[[jax.Array], jax.Array], NoiseFn]:
+    """Stateless-hash noise, bit-exact between host and the fused kernel.
+
+    State is uint32[2] = (seed, step counter); every step consumes one
+    counter tick and hashes (seed, ctr, chain, node) — the scale-mode
+    equivalent of the chip's per-cell LFSRs, quantized like the 8-bit RNG
+    DAC.  Returns (init_fn(key) -> state, step_fn).
+    """
+    rows = jnp.arange(batch, dtype=jnp.uint32)[:, None]
+    cols = jnp.arange(n_nodes, dtype=jnp.uint32)[None, :]
+
+    def init(key: jax.Array) -> jax.Array:
+        seed = jax.random.bits(key, (1,), jnp.uint32)[0]
+        return jnp.stack([seed, jnp.uint32(0)])
+
+    def step(state: jax.Array) -> tuple[jax.Array, jax.Array]:
+        u = lfsr_mod.counter_uniform(state[0], state[1], rows, cols)
+        return state + jnp.array([0, 1], jnp.uint32), u
+
+    step.spec = NoiseSpec(kind="counter")
+    return init, step
 
 
 def make_lfsr_noise(graph: ChimeraGraph, batch: int, decimation: int = 8
@@ -59,15 +119,17 @@ def make_lfsr_noise(graph: ChimeraGraph, batch: int, decimation: int = 8
 
     Returns (init_fn(key) -> state, step_fn(state) -> (state, u[batch, N])).
     Vertical nodes read the register bytes; horizontal nodes read the
-    bit-reversed bytes (paper's sharing trick).
+    bit-reversed bytes (paper's sharing trick).  Per-node mapping is one
+    gather through the precomputed inverse permutation (shared with the
+    fused kernel's in-kernel LFSR path).
     """
     cells = sorted(
         {(int(r), int(c)) for r, c in zip(graph.node_r, graph.node_c)}
     )
     vert = np.stack([graph.cell_nodes(r, c, side=0) for r, c in cells])
     horiz = np.stack([graph.cell_nodes(r, c, side=1) for r, c in cells])
-    vert_j = jnp.asarray(vert)
-    horiz_j = jnp.asarray(horiz)
+    perm = lfsr_mod.node_gather_perm(vert, horiz, graph.n_nodes)
+    perm_j = jnp.asarray(perm)
     n_cells = len(cells)
 
     def init(key: jax.Array) -> jax.Array:
@@ -75,8 +137,10 @@ def make_lfsr_noise(graph: ChimeraGraph, batch: int, decimation: int = 8
 
     def step(state: jax.Array) -> tuple[jax.Array, jax.Array]:
         return lfsr_mod.lfsr_uniform_for_graph(
-            state, vert_j, horiz_j, graph.n_nodes, decimation)
+            state, None, None, graph.n_nodes, decimation, gather_perm=perm_j)
 
+    step.spec = NoiseSpec(kind="lfsr", decimation=decimation,
+                          gather_perm=tuple(int(x) for x in perm))
     return init, step
 
 
@@ -95,7 +159,13 @@ def half_sweep(
     beta: jax.Array,
     u: jax.Array,
 ) -> jax.Array:
-    """Parallel update of the nodes selected by ``update_mask`` (eqn 2)."""
+    """Parallel update of the nodes selected by ``update_mask`` (eqn 2).
+
+    ``beta`` may be a scalar or a (B,) per-chain vector (tempering ladder).
+    """
+    beta = jnp.asarray(beta, jnp.float32)
+    if beta.ndim == 1:
+        beta = beta[:, None]
     I = neuron_input(m, chip)
     act = jnp.tanh(beta * chip.tanh_gain * (I + chip.tanh_offset))
     decision = act + chip.rand_gain * u + chip.comp_offset
@@ -139,6 +209,16 @@ def make_sweep_fn(
     return sweep
 
 
+def _resolve_kernel(backend: str, kernel: Callable | None) -> Callable | None:
+    """Half-sweep implementation for the scan-based backends."""
+    if kernel is not None:
+        return kernel
+    if backend == "pallas":
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.make_kernel_half_sweep()
+    return None  # "ref" (and "fused" fallbacks) use the jnp half_sweep
+
+
 def gibbs_sample(
     chip: EffectiveChip,
     color: jax.Array,
@@ -150,13 +230,31 @@ def gibbs_sample(
     clamp_values: jax.Array | None = None,
     collect: bool = False,
     kernel: Callable | None = None,
+    backend: str | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array | None]:
-    """Run len(betas) sweeps.  Returns (final_m, noise_state, traj|None).
+    """Run n_sweeps sweeps.  Returns (final_m, noise_state, traj|None).
 
+    betas: (n_sweeps,) shared schedule or (n_sweeps, B) per-chain inverse
+    temperatures (parallel-tempering replicas).
     traj (if collect): (n_sweeps, B, N) spin states after every sweep.
+    backend: "ref" | "pallas" | "fused" (None/"auto" -> REPRO_PBIT_BACKEND
+    env var, default "ref").  The fused engine runs every sweep inside one
+    kernel launch; it cannot emit per-sweep trajectories, so ``collect``
+    falls back to the scan path.
     """
+    backend = resolve_backend(backend)
+    # an explicit kernel= always wins (custom half-sweep injection): the
+    # fused engine could not honor it, so fall through to the scan path
+    if backend == "fused" and not collect and kernel is None:
+        from repro.kernels import ops as kernel_ops
+        m, ns = kernel_ops.fused_sweeps(
+            init_m, chip, color, betas, noise_state,
+            getattr(noise_fn, "spec", None),
+            clamp_mask=clamp_mask, clamp_values=clamp_values)
+        return m, ns, None
+
     sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
-                          kernel)
+                          _resolve_kernel(backend, kernel))
 
     def body(carry, beta):
         nxt = sweep(carry, beta)
@@ -180,17 +278,35 @@ def gibbs_stats(
     clamp_mask: jax.Array | None = None,
     clamp_values: jax.Array | None = None,
     kernel: Callable | None = None,
+    backend: str | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Accumulate first/second moments on-line (no trajectory storage).
 
     Returns (mean_spin[N], mean_edge_corr[E], final_m, noise_state), with
     moments averaged over chains and post-burn-in sweeps — exactly the
-    statistics contrastive divergence needs.
+    statistics contrastive divergence needs.  With backend="fused" the whole
+    phase (every sweep AND the moment accumulation) is one kernel launch:
+    per-sweep spins never touch HBM; edge correlations are read out of the
+    accumulated m^T m Gram matrix.
     """
-    sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
-                          kernel)
+    backend = resolve_backend(backend)
     e0, e1 = edges[:, 0], edges[:, 1]
     betas = jnp.full((n_sweeps,), beta, dtype=jnp.float32)
+    denom = jnp.maximum(n_sweeps - burn_in, 1).astype(jnp.float32)
+
+    if backend == "fused" and kernel is None:
+        from repro.kernels import ops as kernel_ops
+        measured = (jnp.arange(n_sweeps) >= burn_in).astype(jnp.float32)
+        m, ns, s_sum, c_sum = kernel_ops.fused_sweeps(
+            init_m, chip, color, betas, noise_state,
+            getattr(noise_fn, "spec", None),
+            clamp_mask=clamp_mask, clamp_values=clamp_values,
+            measured=measured)
+        scale = denom * init_m.shape[0]
+        return s_sum / scale, c_sum[e0, e1] / scale, m, ns
+
+    sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
+                          _resolve_kernel(backend, kernel))
 
     def body(carry, inp):
         state, s_sum, c_sum = carry
@@ -209,7 +325,6 @@ def gibbs_stats(
         jnp.zeros((edges.shape[0],), jnp.float32),
     )
     (state, s_sum, c_sum), _ = jax.lax.scan(body, init, (betas, measured))
-    denom = jnp.maximum(n_sweeps - burn_in, 1).astype(jnp.float32)
     return s_sum / denom, c_sum / denom, state.m, state.noise_state
 
 

@@ -10,7 +10,10 @@ decision needs only the two replicas' energies.
 
 All replicas advance in one batched chromatic sweep (the chains dimension),
 so the TPU cost over plain multi-chain annealing is just the energy
-evaluation every `swap_every` sweeps.
+evaluation every `swap_every` sweeps.  Sweeps run through the shared
+backend API in core/pbit.py (per-replica betas ride the (n_sweeps, R) beta
+matrix): with backend="fused" each swap round is a single resident-sweep
+kernel launch.
 """
 from __future__ import annotations
 
@@ -60,32 +63,16 @@ def parallel_tempering(
     noise_state, noise_fn = machine.noise_fn(k2, R)
     betas = beta_ladder(cfg)
 
-    def half(mm, ns, bvec, c):
-        ns, u = noise_fn(ns)
-        # per-replica beta: fold into the tanh gain per row
-        I = mm @ chip.W.T + chip.h
-        act = jnp.tanh(bvec[:, None] * chip.tanh_gain *
-                       (I + chip.tanh_offset))
-        dec = act + chip.rand_gain * u + chip.comp_offset
-        new = jnp.where(dec >= 0.0, 1.0, -1.0)
-        mask = (color == c)
-        return jnp.where(mask, new, mm), ns
-
     n_rounds = cfg.n_sweeps // cfg.swap_every
 
     def round_body(carry, rkey):
         m, ns, order = carry                   # order: slot -> replica id
         slot_of = jnp.argsort(order)           # replica id -> slot
         bvec = betas[slot_of]                  # per-replica beta
-
-        def sweep_body(c2, _):
-            mm, ns2 = c2
-            for c in (0, 1):
-                mm, ns2 = half(mm, ns2, bvec, c)
-            return (mm, ns2), None
-
-        (m, ns), _ = jax.lax.scan(sweep_body, (m, ns),
-                                  None, length=cfg.swap_every)
+        beta_rows = jnp.broadcast_to(bvec, (cfg.swap_every, R))
+        m, ns, _ = pbit.gibbs_sample(
+            chip, color, m, beta_rows, ns, noise_fn,
+            backend=machine.backend)
         e = ising_energy(m, Jf, hf)                       # (R,)
         # Metropolis swap of adjacent *temperature slots* (even pairs one
         # round, odd pairs the next, chosen by key parity)

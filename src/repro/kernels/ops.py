@@ -1,8 +1,11 @@
 """Jitted public wrappers around the Pallas kernels.
 
-`make_kernel_half_sweep` adapts the fused kernel to the sampler's
-`half_sweep(m, chip, update_mask, beta, u)` signature (see core/pbit.py) so
-the whole CD / annealing stack can run through Pallas with one flag.
+`make_kernel_half_sweep` adapts the per-half-sweep kernel to the sampler's
+`half_sweep(m, chip, update_mask, beta, u)` signature (see core/pbit.py).
+`fused_sweeps` adapts the sweep-resident engine (kernels/sweep_fused.py) to
+the chip + graph-color view the backend API in core/pbit.py works with, so
+the whole CD / annealing / tempering stack can run through either kernel
+with one flag (see docs/kernels.md).
 """
 from __future__ import annotations
 
@@ -10,10 +13,12 @@ import functools
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.hardware import EffectiveChip
 from repro.kernels.pbit_update import pbit_half_sweep_pallas
 from repro.kernels.ref import pbit_half_sweep_ref
+from repro.kernels.sweep_fused import sweep_fused_pallas
 
 
 def default_interpret() -> bool:
@@ -42,3 +47,49 @@ def ref_half_sweep(m, chip: EffectiveChip, update_mask, beta, u):
     return pbit_half_sweep_ref(
         m, chip.W, chip.h, chip.tanh_gain, chip.tanh_offset,
         chip.rand_gain, chip.comp_offset, update_mask, beta, u)
+
+
+def fused_sweeps(
+    m: jax.Array,
+    chip: EffectiveChip,
+    color: jax.Array,
+    betas: jax.Array,               # (S,) or (S, B)
+    noise_state: jax.Array,
+    noise_spec,                     # core/pbit.py NoiseSpec
+    clamp_mask: jax.Array | None = None,
+    clamp_values: jax.Array | None = None,
+    measured: jax.Array | None = None,
+    *,
+    block_b: int = 128,
+    interpret: bool | None = None,
+):
+    """Run S resident sweeps through the fused engine.
+
+    Returns (m', noise_state') or, when ``measured`` is given,
+    (m', noise_state', s_sum[N], c_sum[N, N]) — raw sums over
+    (chains x measured sweeps); divide by B * sum(measured).
+    """
+    interp = default_interpret() if interpret is None else interpret
+    if noise_spec is None or noise_spec.kind not in ("counter", "lfsr"):
+        kind = None if noise_spec is None else noise_spec.kind
+        raise ValueError(
+            f"fused backend needs in-kernel noise ('counter' or 'lfsr'), "
+            f"got {kind!r}; build the noise fn with make_counter_noise or "
+            f"make_lfsr_noise")
+    B = m.shape[0]
+    betas = jnp.asarray(betas, jnp.float32)
+    if betas.ndim == 1:
+        betas = jnp.broadcast_to(betas[:, None], (betas.shape[0], B))
+    mask0 = (color == 0)
+    mask1 = (color == 1)
+    if clamp_mask is not None:
+        mask0 = mask0 & ~clamp_mask
+        mask1 = mask1 & ~clamp_mask
+    return sweep_fused_pallas(
+        m, chip.W, chip.h, chip.tanh_gain, chip.tanh_offset,
+        chip.rand_gain, chip.comp_offset, mask0, mask1, betas, noise_state,
+        clamp_mask=clamp_mask, clamp_values=clamp_values, measured=measured,
+        noise_mode=noise_spec.kind, decimation=noise_spec.decimation,
+        gather_perm=noise_spec.gather_perm,
+        accumulate=measured is not None,
+        block_b=block_b, interpret=interp)

@@ -9,8 +9,9 @@ through HBM.
 Tiling: grid (B/tb, N/tn, N/tk) with a float32 VMEM accumulator; the K loop
 (contraction over source spins) is the innermost, sequential grid dim.  All
 tiles are MXU-aligned (multiples of 8x128 lanes; defaults 128/128/512).
-The scalar beta is folded into the per-node gain vector outside the kernel
-(one VPU multiply saved per element, and no SMEM scalar plumbing).
+Beta enters as a (B, 1) column so every chain can run its own inverse
+temperature (parallel-tempering replicas) with no SMEM scalar plumbing;
+scalars are broadcast to the column outside the kernel.
 
 Validated in interpret mode against kernels/ref.py over shape/dtype sweeps
 (tests/test_kernels.py); the on-silicon path is the same code with
@@ -24,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.util import pad_axis as _pad_to
+
 try:  # compiler params class moved across jax versions
     from jax.experimental.pallas import tpu as pltpu
     _VMEM = pltpu.VMEM
@@ -35,8 +38,9 @@ except ImportError:  # pragma: no cover
     _COMPILER_PARAMS = None
 
 
-def _kernel(m_k_ref, w_ref, m_io_ref, h_ref, bgain_ref, off_ref,
-            rg_ref, co_ref, mask_ref, u_ref, out_ref, acc_ref, *, n_k: int):
+def _kernel(m_k_ref, w_ref, m_io_ref, h_ref, gain_ref, off_ref,
+            rg_ref, co_ref, mask_ref, u_ref, beta_ref, out_ref, acc_ref,
+            *, n_k: int):
     """Grid: (i: batch tiles, j: node tiles, k: contraction tiles)."""
     k = pl.program_id(2)
 
@@ -54,23 +58,15 @@ def _kernel(m_k_ref, w_ref, m_io_ref, h_ref, bgain_ref, off_ref,
     @pl.when(k == n_k - 1)
     def _neuron():
         I = acc_ref[...] + h_ref[...]                      # (tb, tn)
-        act = jnp.tanh(bgain_ref[...] * (I + off_ref[...]))
+        # beta is a per-chain column (tempering replicas run one beta each);
+        # (tb, 1) * (1, tn) broadcasts to the tile
+        act = jnp.tanh(beta_ref[...] * gain_ref[...] * (I + off_ref[...]))
         decision = act + rg_ref[...] * u_ref[...] + co_ref[...]
         new = jnp.where(decision >= 0.0, 1.0, -1.0)
         keep = mask_ref[...] != 0
         out_ref[...] = jnp.where(
             keep, new, m_io_ref[...].astype(jnp.float32)
         ).astype(out_ref.dtype)
-
-
-def _pad_to(x: jax.Array, mult: int, axis: int, value=0.0) -> jax.Array:
-    size = x.shape[axis]
-    rem = (-size) % mult
-    if rem == 0:
-        return x
-    pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, rem)
-    return jnp.pad(x, pads, constant_values=value)
 
 
 @functools.partial(
@@ -98,20 +94,23 @@ def pbit_half_sweep_pallas(
 
     Pads B to block_b and N to lcm-ish(block_n, block_k) multiples;
     zero-padded source spins contribute nothing to the matmul, and padded
-    output nodes are masked off and sliced away.
+    output nodes are masked off and sliced away.  ``beta`` may be a scalar
+    or a (B,) per-chain vector (parallel-tempering replicas).
     """
     B, N = m.shape
     out_dtype = m.dtype
     nmult = max(block_n, block_k)
 
-    bgain = (jnp.asarray(beta, jnp.float32) * gain).astype(jnp.float32)
+    beta_col = jnp.broadcast_to(
+        jnp.asarray(beta, jnp.float32).reshape(-1, 1), (B, 1))
+    bp = _pad_to(beta_col, block_b, 0)
     mp = _pad_to(_pad_to(m, block_b, 0), nmult, 1)
     Wp = _pad_to(_pad_to(W, nmult, 0), nmult, 1)
     up = _pad_to(_pad_to(u, block_b, 0), nmult, 1)
     row = lambda x, v=0.0: _pad_to(x.reshape(1, -1).astype(jnp.float32),
                                    nmult, 1, v)
-    hp, bgp, op_, rgp, cop = (row(x) for x in
-                              (h, bgain, off, rand_gain, comp_off))
+    hp, gp, op_, rgp, cop = (row(x) for x in
+                             (h, gain, off, rand_gain, comp_off))
     maskp = _pad_to(update_mask.reshape(1, -1).astype(jnp.int8), nmult, 1, 0)
 
     Bp, Np = mp.shape
@@ -123,9 +122,10 @@ def pbit_half_sweep_pallas(
             pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),  # m (matmul)
             pl.BlockSpec((block_n, block_k), lambda i, j, k: (j, k)),  # W
             pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, j)),  # m (carry)
-            vec(), vec(), vec(), vec(), vec(),                         # h,bg,off,rg,co
+            vec(), vec(), vec(), vec(), vec(),                         # h,g,off,rg,co
             pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),        # mask (int8)
             pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, j)),  # u
+            pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),        # beta col
     ]
     out_specs = pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, j))
     kw = {}
@@ -141,5 +141,5 @@ def pbit_half_sweep_pallas(
         scratch_shapes=[_VMEM((block_b, block_n), jnp.float32)],
         interpret=interpret,
         **kw,
-    )(mp, Wp, mp, hp, bgp, op_, rgp, cop, maskp, up)
+    )(mp, Wp, mp, hp, gp, op_, rgp, cop, maskp, up, bp)
     return out[:B, :N]

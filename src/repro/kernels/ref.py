@@ -10,8 +10,12 @@ def pbit_half_sweep_ref(m, W, h, gain, off, rand_gain, comp_off,
 
     m: (B, N) spins in {-1, +1};  W: (N, N) directional couplings
     (I_i = sum_j W[i, j] m_j);  h/gain/off/rand_gain/comp_off: (N,);
-    update_mask: (N,) bool;  beta: scalar;  u: (B, N) uniform noise.
+    update_mask: (N,) bool;  beta: scalar or (B,) per-chain inverse
+    temperature (parallel tempering replicas);  u: (B, N) uniform noise.
     """
+    beta = jnp.asarray(beta, jnp.float32)
+    if beta.ndim == 1:
+        beta = beta[:, None]
     I = m @ W.T + h
     act = jnp.tanh(beta * gain * (I + off))
     decision = act + rand_gain * u + comp_off

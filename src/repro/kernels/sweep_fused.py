@@ -1,0 +1,304 @@
+"""Pallas TPU kernel: sweep-resident sampling engine.
+
+The chip's figure of merit is flips per nanosecond: all 440 neurons settle
+in parallel with per-cell LFSR noise generated *in place*.  The per-half-
+sweep kernel (pbit_update.py) still round-trips spins and noise through HBM
+twice per sweep and leaves moment accumulation to separate jnp ops.  This
+kernel closes that gap: one invocation executes S full chromatic sweeps
+(both color half-sweeps) with
+
+  * spins resident in VMEM for the whole S-sweep block,
+  * noise generated inside the kernel — either counter mode (a stateless
+    uint32 hash shared bit-for-bit with the host reference in
+    core/lfsr.py::counter_uniform) or chip-faithful mode (the Galois LFSR of
+    core/lfsr.py advanced in-kernel, including the bit-reversed-byte sharing
+    trick, bit-exact with the host LFSR stream),
+  * optional on-line first/second moment accumulation (spin sums and the
+    full m^T m Gram matrix, MXU food) in VMEM scratch, so CD's
+    `gibbs_stats` never materializes per-sweep state in HBM.
+
+Grid: (B/tb,) over batch tiles; each program owns its rows for all S
+sweeps.  W lives fully in VMEM, which bounds the problem size to roughly
+N <= 1.5k fp32 on a 16 MB-VMEM core — the chip itself is N=440.  Larger N
+should fall back to the tiled per-half-sweep kernel (see docs/kernels.md).
+Moment scratch accumulates across the (sequential) batch-tile grid and is
+flushed to the output on the last program, the same revisiting pattern as
+the K-loop accumulator in pbit_update.py.
+
+Validated bit-for-bit in interpret mode against a scan of the
+kernels/ref.py oracle with host-side noise (tests/test_sweep_fused.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import lfsr as lfsr_mod
+from repro.kernels.util import pad_axis as _pad_axis
+from repro.kernels.util import round_up as _round_up
+
+try:  # compiler params class moved across jax versions
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                               getattr(pltpu, "TPUCompilerParams", None))
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+    _COMPILER_PARAMS = None
+
+NOISE_COUNTER = "counter"
+NOISE_LFSR = "lfsr"
+
+
+def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
+            noise_mode: str, has_clamp: bool, accumulate: bool,
+            decimation: int):
+    it = iter(refs)
+    m0_ref = next(it)
+    w_ref = next(it)
+    h_ref, g_ref, off_ref, rg_ref, co_ref = (next(it) for _ in range(5))
+    mask0_ref, mask1_ref = next(it), next(it)
+    betas_ref = next(it)
+    clampm_ref = next(it) if has_clamp else None
+    clampv_ref = next(it) if has_clamp else None
+    meas_ref = next(it) if accumulate else None
+    perm_ref = next(it) if noise_mode == NOISE_LFSR else None
+    noise_in_ref = next(it)
+    m_out_ref = next(it)
+    noise_out_ref = next(it)
+    if accumulate:
+        ssum_out_ref, csum_out_ref = next(it), next(it)
+        ssum_ref, csum_ref = next(it), next(it)
+
+    i = pl.program_id(0)
+
+    if accumulate:
+        @pl.when(i == 0)
+        def _zero_moments():
+            ssum_ref[...] = jnp.zeros_like(ssum_ref)
+            csum_ref[...] = jnp.zeros_like(csum_ref)
+
+    w = w_ref[...]
+    hrow, grow = h_ref[...], g_ref[...]
+    offrow, rgrow, corow = off_ref[...], rg_ref[...], co_ref[...]
+    masks = (mask0_ref[...] != 0, mask1_ref[...] != 0)
+
+    if noise_mode == NOISE_COUNTER:
+        seed = noise_in_ref[0, 0]
+        ctr0 = noise_in_ref[0, 1]
+        rows = (jax.lax.broadcasted_iota(jnp.uint32, (tb, Np), 0)
+                + (i * tb).astype(jnp.uint32))
+        cols = jax.lax.broadcasted_iota(jnp.uint32, (tb, Np), 1)
+        noise_carry0 = jnp.zeros((), jnp.uint32)  # unused
+    else:
+        noise_carry0 = noise_in_ref[...]          # (tb, Cp) LFSR states
+        perm_cols = perm_ref[0, :]                # node -> flat LFSR column
+
+    def one_sweep(s, carry):
+        m, st = carry
+        if has_clamp:
+            m = jnp.where(clampm_ref[...] != 0, clampv_ref[...], m)
+        beta_col = betas_ref[pl.ds(s, 1), :].reshape(tb, 1)
+        for c in (0, 1):
+            if noise_mode == NOISE_COUNTER:
+                ctr = ctr0 + jnp.uint32(2) * s.astype(jnp.uint32) \
+                    + jnp.uint32(c)
+                u = lfsr_mod.counter_uniform(seed, ctr, rows, cols)
+            else:
+                st = lfsr_mod.lfsr_step_n(st, decimation)
+                u = jnp.take(lfsr_mod.flat_cell_uniforms(st), perm_cols,
+                             axis=-1)
+            I = jax.lax.dot_general(
+                m, w, dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) + hrow
+            act = jnp.tanh(beta_col * grow * (I + offrow))
+            decision = act + rgrow * u + corow
+            new = jnp.where(decision >= 0.0, 1.0, -1.0)
+            m = jnp.where(masks[c], new, m)
+        if accumulate:
+            wgt = meas_ref[pl.ds(s, 1), :]                      # (1, 1)
+            # padded batch rows update like real chains; keep them out of
+            # the moments
+            row_ids = (jax.lax.broadcasted_iota(jnp.int32, (tb, 1), 0)
+                       + i * tb)
+            mv = jnp.where(row_ids < B, m, 0.0)
+            ssum_ref[...] += wgt * jnp.sum(mv, axis=0, keepdims=True)
+            csum_ref[...] += wgt[0, 0] * jax.lax.dot_general(
+                mv, mv, dimension_numbers=(((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)             # m^T m
+        return m, st
+
+    m_fin, st_fin = jax.lax.fori_loop(
+        0, S, one_sweep, (m0_ref[...].astype(jnp.float32), noise_carry0))
+    m_out_ref[...] = m_fin.astype(m_out_ref.dtype)
+
+    if noise_mode == NOISE_COUNTER:
+        noise_out_ref[0, 0] = seed
+        noise_out_ref[0, 1] = ctr0 + jnp.uint32(2 * S)
+    else:
+        noise_out_ref[...] = st_fin
+
+    if accumulate:
+        @pl.when(i == n_b - 1)
+        def _flush_moments():
+            ssum_out_ref[...] = ssum_ref[...]
+            csum_out_ref[...] = csum_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("noise_mode", "decimation", "gather_perm", "accumulate",
+                     "block_b", "interpret"),
+)
+def sweep_fused_pallas(
+    m: jax.Array,                 # (B, N) spins in {-1, +1}
+    W: jax.Array,                 # (N, N) directional couplings
+    h: jax.Array,
+    gain: jax.Array,
+    off: jax.Array,
+    rand_gain: jax.Array,
+    comp_off: jax.Array,
+    mask0: jax.Array,             # (N,) bool — color-0 update set (minus clamps)
+    mask1: jax.Array,             # (N,) bool — color-1 update set (minus clamps)
+    betas: jax.Array,             # (S, B) per-sweep, per-chain inverse temps
+    noise_state: jax.Array,       # counter: (2,) uint32; lfsr: (B, C) uint32
+    clamp_mask: jax.Array | None = None,     # (N,) bool
+    clamp_values: jax.Array | None = None,   # (B, N)
+    measured: jax.Array | None = None,       # (S,) moment weights, or None
+    *,
+    noise_mode: str = NOISE_COUNTER,
+    decimation: int = 8,
+    gather_perm: tuple | None = None,   # node -> flat LFSR column (length N)
+    accumulate: bool = False,
+    block_b: int = 128,
+    interpret: bool = True,
+):
+    """Run S resident sweeps.  Returns (m', noise_state'[, s_sum, c_sum]).
+
+    s_sum: (N,) sum of spins over (chains x measured sweeps); c_sum: (N, N)
+    accumulated Gram matrix sum_meas m^T m — extract edge correlations as
+    ``c_sum[e0, e1]``.  Both need dividing by (B * sum(measured)).
+    """
+    B, N = m.shape
+    S = betas.shape[0]
+    out_dtype = m.dtype
+    # clamp_mask alone (freeze nodes at their current spins) is fully
+    # handled by excluding the nodes from mask0/mask1; the kernel only
+    # needs the clamp inputs when values are re-imposed every sweep
+    has_clamp = clamp_mask is not None and clamp_values is not None
+    accumulate = accumulate and measured is not None
+    if noise_mode not in (NOISE_COUNTER, NOISE_LFSR):
+        raise ValueError(f"unknown noise_mode {noise_mode!r}")
+    if S == 0:  # empty schedule: identity, like a zero-length scan
+        noise_out = jnp.asarray(noise_state, jnp.uint32)
+        if accumulate:
+            return (m, noise_out, jnp.zeros((N,), jnp.float32),
+                    jnp.zeros((N, N), jnp.float32))
+        return m, noise_out
+
+    Np = _round_up(N, 128)
+    tb = min(block_b, _round_up(B, 8))
+    Bp = _round_up(B, tb)
+    n_b = Bp // tb
+
+    mp = _pad_axis(_pad_axis(m, tb, 0), 128, 1)
+    Wp = _pad_axis(_pad_axis(W, 128, 0), 128, 1)
+    row = lambda x, v=0.0: _pad_axis(
+        jnp.asarray(x).reshape(1, -1).astype(jnp.float32), 128, 1, v)
+    hp, gp, op_, rgp, cop = (row(x) for x in
+                             (h, gain, off, rand_gain, comp_off))
+    m0p = _pad_axis(jnp.asarray(mask0).reshape(1, -1).astype(jnp.int8),
+                    128, 1, 0)
+    m1p = _pad_axis(jnp.asarray(mask1).reshape(1, -1).astype(jnp.int8),
+                    128, 1, 0)
+    betasp = _pad_axis(jnp.asarray(betas, jnp.float32), tb, 1)
+
+    vec = lambda: pl.BlockSpec((1, Np), lambda i: (0, 0))
+    in_specs = [
+        pl.BlockSpec((tb, Np), lambda i: (i, 0)),      # m
+        pl.BlockSpec((Np, Np), lambda i: (0, 0)),      # W (VMEM-resident)
+        vec(), vec(), vec(), vec(), vec(),             # h, g, off, rg, co
+        vec(), vec(),                                  # color masks (int8)
+        pl.BlockSpec((S, tb), lambda i: (0, i)),       # betas
+    ]
+    args = [mp, Wp, hp, gp, op_, rgp, cop, m0p, m1p, betasp]
+
+    if has_clamp:
+        in_specs.append(vec())
+        args.append(_pad_axis(
+            jnp.asarray(clamp_mask).reshape(1, -1).astype(jnp.int8),
+            128, 1, 0))
+        in_specs.append(pl.BlockSpec((tb, Np), lambda i: (i, 0)))
+        args.append(_pad_axis(_pad_axis(
+            jnp.asarray(clamp_values, jnp.float32), tb, 0), 128, 1))
+    if accumulate:
+        in_specs.append(pl.BlockSpec((S, 1), lambda i: (0, 0)))
+        args.append(jnp.asarray(measured, jnp.float32).reshape(S, 1))
+
+    if noise_mode == NOISE_COUNTER:
+        in_specs.append(pl.BlockSpec((1, 2), lambda i: (0, 0)))
+        args.append(jnp.asarray(noise_state, jnp.uint32).reshape(1, 2))
+        noise_out_shape = jax.ShapeDtypeStruct((1, 2), jnp.uint32)
+        noise_out_spec = pl.BlockSpec((1, 2), lambda i: (0, 0))
+    else:
+        if gather_perm is None:
+            raise ValueError("lfsr noise_mode needs gather_perm "
+                             "(see core/lfsr.py::node_gather_perm)")
+        C = noise_state.shape[-1]
+        Cp = _round_up(C, 128)
+        # remap flat columns from the C-cell layout to the padded-Cp layout
+        p = np.asarray(gather_perm, np.int64)
+        p = (p // C) * Cp + (p % C)
+        perm_padded = np.concatenate(
+            [p, np.zeros(Np - N, np.int64)]).astype(np.int32)
+        in_specs.append(pl.BlockSpec((1, Np), lambda i: (0, 0)))
+        args.append(jnp.asarray(perm_padded).reshape(1, Np))
+        stp = _pad_axis(_pad_axis(jnp.asarray(noise_state, jnp.uint32),
+                                  tb, 0, 1), 128, 1, 1)
+        in_specs.append(pl.BlockSpec((tb, Cp), lambda i: (i, 0)))
+        args.append(stp)
+        noise_out_shape = jax.ShapeDtypeStruct((Bp, Cp), jnp.uint32)
+        noise_out_spec = pl.BlockSpec((tb, Cp), lambda i: (i, 0))
+
+    out_shape = [jax.ShapeDtypeStruct((Bp, Np), out_dtype), noise_out_shape]
+    out_specs = [pl.BlockSpec((tb, Np), lambda i: (i, 0)), noise_out_spec]
+    scratch = []
+    if accumulate:
+        out_shape += [jax.ShapeDtypeStruct((1, Np), jnp.float32),
+                      jax.ShapeDtypeStruct((Np, Np), jnp.float32)]
+        out_specs += [pl.BlockSpec((1, Np), lambda i: (0, 0)),
+                      pl.BlockSpec((Np, Np), lambda i: (0, 0))]
+        scratch = [_VMEM((1, Np), jnp.float32),
+                   _VMEM((Np, Np), jnp.float32)]
+
+    kw = {}
+    if not interpret and _COMPILER_PARAMS is not None:
+        kw["compiler_params"] = _COMPILER_PARAMS(
+            dimension_semantics=("arbitrary",))
+    outs = pl.pallas_call(
+        functools.partial(
+            _kernel, S=S, tb=tb, Np=Np, n_b=n_b, B=B,
+            noise_mode=noise_mode, has_clamp=has_clamp,
+            accumulate=accumulate, decimation=decimation),
+        grid=(n_b,),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kw,
+    )(*args)
+
+    m_out = outs[0][:B, :N]
+    if noise_mode == NOISE_COUNTER:
+        noise_out = outs[1].reshape(2)
+    else:
+        noise_out = outs[1][:B, :noise_state.shape[-1]]
+    if accumulate:
+        return m_out, noise_out, outs[2][0, :N], outs[3][:N, :N]
+    return m_out, noise_out

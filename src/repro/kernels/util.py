@@ -1,0 +1,20 @@
+"""Shared helpers for the Pallas kernels in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_up(x: int, mult: int) -> int:
+    return x + (-x) % mult
+
+
+def pad_axis(x: jax.Array, mult: int, axis: int, value=0) -> jax.Array:
+    """Zero-pad (or ``value``-pad) one axis up to a multiple of ``mult``."""
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)

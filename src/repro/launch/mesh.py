@@ -11,7 +11,19 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # AxisType landed after jax 0.4.x; older versions imply Auto axes
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover
+    AxisType = None
+
+
+def _mesh(shape, axes) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 # TPU v5e hardware constants (roofline + napkin math)
 PEAK_FLOPS_BF16 = 197e12        # per chip
@@ -23,16 +35,14 @@ HBM_BYTES = 16 * 2**30          # 16 GiB per chip
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over however many (possibly fake) local devices exist."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((data, model), ("data", "model"))
 
 
 def n_chips(mesh: Mesh) -> int:

@@ -1,0 +1,70 @@
+"""Hypothesis shim: real hypothesis when installed, deterministic fallback
+otherwise.
+
+The container images this repo targets do not all ship `hypothesis`; a hard
+import used to kill collection of the whole suite.  Test modules import
+``given``/``settings``/``st`` from here instead.  The fallback draws a fixed
+number of pseudo-random examples from the same strategy surface the tests
+use (integers / booleans / floats / sampled_from), seeded per-test so runs
+are reproducible.
+"""
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng: random.Random):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(values):
+            vals = list(values)
+            return _Strategy(lambda r: vals[r.randrange(len(vals))])
+
+    def settings(max_examples: int = 10, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NOT functools.wraps: pytest must see a zero-arg signature or it
+            # would treat the strategy parameters as fixtures
+            def runner():
+                n = getattr(runner, "_max_examples", 10)
+                rng = random.Random(fn.__name__)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco
