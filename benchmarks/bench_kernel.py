@@ -1,4 +1,5 @@
-"""Pallas kernel microbenchmark: sweep-resident fused engine vs unfused.
+"""Pallas kernel microbenchmark: sweep-resident fused engine vs unfused,
+dense (N, N) matmul vs Chimera-native block-sparse (degree-6 slot gather).
 
 Times the real kernels (CPU interpret mode — the TPU story is projected
 from the HBM traffic + roofline model) and writes the perf trajectory to
@@ -11,7 +12,11 @@ Reported per configuration:
     S=1 and S=S_RESIDENT sweeps per launch;
   * the modeled HBM bytes/sweep for each path and the fused-vs-half-sweep
     traffic reduction (the kernel's reason to exist);
-  * projected TPU v5e sweeps/sec from the max(HBM-bound, MXU-bound) time.
+  * projected TPU v5e sweeps/sec from the max(HBM-bound, MXU-bound) time;
+  * dense-vs-sparse configs (N = 440, 2048, 8192): modeled FLOPs, weight
+    bytes, VMEM residency feasibility, measured sparse-kernel flips/ns.
+    The ≥8k-spin rows run *only* on the sparse path — the dense W no
+    longer fits a 16 MB VMEM core, the sparse slot layout always does.
 
 Usage: python benchmarks/bench_kernel.py [--quick]
 """
@@ -26,13 +31,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_json, timer
+from repro.core.chimera import make_chimera, make_chip_graph
 from repro.kernels.pbit_update import pbit_half_sweep_pallas
 from repro.kernels.ref import pbit_half_sweep_ref
-from repro.kernels.sweep_fused import sweep_fused_pallas
+from repro.kernels.sweep_fused import sweep_fused_pallas, sweep_sparse_pallas
 from repro.launch.mesh import HBM_BW
 from repro.launch.mesh import PEAK_FLOPS_BF16 as PEAK_FLOPS
 
 S_RESIDENT = 16
+VMEM_BYTES = 16 * 2 ** 20       # per-core VMEM the resident engine fits in
+SPARSE_DEGREE = 6               # Chimera: 4 in-cell K4,4 + 2 chain couplers
 
 
 def traffic_model(B: int, N: int, S: int) -> dict:
@@ -120,6 +128,87 @@ def _add_tpu_projection(B: int, N: int, out: dict) -> None:
         out[f"tpu_projected_{key}_flips_per_ns"] = sps * B * N * 1e-9
 
 
+# ---------------------------------------------------------------------------
+# dense vs Chimera-native block-sparse
+# ---------------------------------------------------------------------------
+def dense_vs_sparse_model(B: int, N: int, S: int,
+                          D: int = SPARSE_DEGREE) -> dict:
+    """Modeled FLOPs / bytes for the two weight layouts of the resident
+    engine, plus VMEM-residency feasibility."""
+    a = B * N * 4
+    dense_w = N * N * 4                    # fp32 couplings
+    sparse_w = 2 * D * N * 4               # fp32 slot weights + int32 table
+    flops_dense = 2 * 2 * B * N * N        # two half-sweep matmuls
+    flops_sparse = 2 * 2 * B * N * D       # two half-sweeps of D-slot FMAs
+    # the resident engine needs W + one (block_b, N) spin tile (+ scratch
+    # of the same order) simultaneously live in VMEM
+    tile = 128 * N * 4
+    return {
+        "dense_weight_bytes": dense_w,
+        "sparse_weight_bytes": sparse_w,
+        "weight_bytes_reduction": dense_w / sparse_w,
+        "flops_per_sweep_dense": flops_dense,
+        "flops_per_sweep_sparse": flops_sparse,
+        "flop_reduction": flops_dense / flops_sparse,
+        "hbm_bytes_per_sweep_fused_dense": (dense_w + 2 * a) / S + B * 4,
+        "hbm_bytes_per_sweep_fused_sparse": (sparse_w + 2 * a) / S + B * 4,
+        "dense_vmem_resident_feasible": dense_w + 2 * tile <= VMEM_BYTES,
+        "sparse_vmem_resident_feasible": sparse_w + 2 * tile <= VMEM_BYTES,
+    }
+
+
+def _chimera_for(N: int):
+    if N == 440:
+        return make_chip_graph()
+    side = int(round((N / 8) ** 0.5))
+    g = make_chimera(side, side)
+    assert g.n_nodes == N, (g.n_nodes, N)
+    return g
+
+
+def bench_sparse_config(N: int, B: int, S: int, iters: int = 1,
+                        measure: bool = True) -> dict:
+    """Dense-vs-sparse comparison row; measures the sparse kernel (CPU
+    interpret) on a real Chimera instance of N spins.  The dense resident
+    engine is measured only where its W still fits VMEM."""
+    out = {"B": B, "N": N, "S": S, "D": SPARSE_DEGREE, "layout": "chimera"}
+    out.update(dense_vs_sparse_model(B, N, S))
+    sps_flops = out["flops_per_sweep_sparse"]
+    out["tpu_projected_sparse_sweeps_per_sec"] = 1.0 / max(
+        out["hbm_bytes_per_sweep_fused_sparse"] / HBM_BW,
+        sps_flops / PEAK_FLOPS)
+    out["tpu_projected_sparse_flips_per_ns"] = (
+        out["tpu_projected_sparse_sweeps_per_sec"] * B * N * 1e-9)
+    if not measure:
+        return out
+
+    g = _chimera_for(N)
+    nbr_idx, nbr_mask = g.neighbor_table()
+    rng = np.random.default_rng(N)
+    nbr_w = jnp.asarray(
+        np.where(nbr_mask, rng.normal(size=nbr_idx.shape) * 0.05, 0.0),
+        jnp.float32)
+    idx = jnp.asarray(nbr_idx)
+    m = jnp.asarray(rng.integers(0, 2, (B, N)) * 2 - 1, jnp.float32)
+    h, gn, o, rg, co = (jnp.asarray(rng.normal(size=N) * 0.1, jnp.float32)
+                        for _ in range(5))
+    mask0 = jnp.asarray(g.color == 0)
+    mask1 = jnp.asarray(g.color == 1)
+    betas = jnp.full((S, B), 0.7, jnp.float32)
+    seedctr = jnp.asarray([1234, 0], jnp.uint32)
+    block_b = min(128, B)
+
+    t = timer(
+        lambda: sweep_sparse_pallas(
+            m, idx, nbr_w, h, gn, o, rg, co, mask0, mask1, betas, seedctr,
+            noise_mode="counter", block_b=block_b, interpret=True)[0],
+        iters=iters)
+    out["cpu_sparse_us_per_launch"] = t * 1e6
+    out["cpu_sparse_sweeps_per_sec"] = S / t
+    out["cpu_sparse_flips_per_ns"] = (S / t) * B * N * 1e-9
+    return out
+
+
 def run(quick: bool = False) -> dict:
     # chip scale is always measured; the paper-chip N=440 rounds to 512
     # lanes in-kernel.  The production-scale config is traffic-model only
@@ -134,12 +223,30 @@ def run(quick: bool = False) -> dict:
     _add_tpu_projection(256, 2048, big)
     results["configs"].append(big)
 
+    # dense-vs-sparse rows: the chip graph, the largest dense-resident
+    # lattice, and a 32x32 Chimera (8192 spins) that only the sparse slot
+    # layout can keep VMEM-resident (dense W = 256 MB >> 16 MB)
+    results["sparse_configs"] = [
+        bench_sparse_config(440, 64 if quick else 256, S_RESIDENT,
+                            iters=1 if quick else 3),
+        bench_sparse_config(2048, 16 if quick else 64, 4,
+                            iters=1, measure=not quick),
+        bench_sparse_config(8192, 8, 2, iters=1, measure=not quick),
+    ]
+
     chip = results["configs"][0]
     emit("kernel_fused_s16_cpu", chip["cpu_fused_s16_us_per_launch"],
          f"sweeps/s={chip['cpu_fused_s16_sweeps_per_sec']:.1f}")
     emit("kernel_traffic_reduction_B256_N2048",
          big["traffic_reduction_vs_halfsweep"],
          f"s1={big['traffic_reduction_s1_vs_halfsweep']:.2f}x")
+    sp2048 = results["sparse_configs"][1]
+    emit("kernel_sparse_flop_reduction_N2048", sp2048["flop_reduction"],
+         f"weight_bytes={sp2048['weight_bytes_reduction']:.0f}x")
+    sp8192 = results["sparse_configs"][2]
+    emit("kernel_sparse_N8192_dense_resident",
+         float(sp8192["dense_vmem_resident_feasible"]),
+         f"sparse_resident={sp8192['sparse_vmem_resident_feasible']}")
 
     save_json("kernel_pbit_update", results)
     if not quick:

@@ -4,9 +4,13 @@ from repro.core.hardware import (
     EffectiveChip,
     HardwareConfig,
     Mismatch,
+    SparseMismatch,
+    attach_sparse,
     ideal_chip,
     program_weights,
+    program_weights_sparse,
     sample_mismatch,
+    sample_mismatch_sparse,
 )
 from repro.core.cd import CDConfig, PBitMachine, train_cd
 from repro.core.annealing import AnnealConfig, anneal, sk_instance
@@ -14,8 +18,10 @@ from repro.core.maxcut import random_chimera_maxcut, solve_maxcut
 
 __all__ = [
     "ChimeraGraph", "make_chimera", "make_chip_graph",
-    "EffectiveChip", "HardwareConfig", "Mismatch", "ideal_chip",
-    "program_weights", "sample_mismatch",
+    "EffectiveChip", "HardwareConfig", "Mismatch", "SparseMismatch",
+    "attach_sparse", "ideal_chip",
+    "program_weights", "program_weights_sparse",
+    "sample_mismatch", "sample_mismatch_sparse",
     "CDConfig", "PBitMachine", "train_cd",
     "AnnealConfig", "anneal", "sk_instance",
     "random_chimera_maxcut", "solve_maxcut",

@@ -14,7 +14,9 @@ tests/test_cd.py::test_hardware_aware_beats_transfer).
 
 Weights are kept as float "master" values (the host accumulator) and
 quantized to signed 8-bit DAC codes on every (re)program, matching the
-chip's digital weight storage.
+chip's digital weight storage.  The master couplings live on the *edge
+list* — one float per physical coupler, exactly the chip's weight-DAC
+count — so the CD update is O(E) and never touches an (n, n) matrix.
 """
 from __future__ import annotations
 
@@ -35,42 +37,130 @@ from repro.core.hardware import (
     EffectiveChip,
     HardwareConfig,
     Mismatch,
+    SparseMismatch,
+    attach_sparse,
     program_weights,
+    program_weights_sparse,
     sample_mismatch,
+    sample_mismatch_sparse,
 )
 
 
 @dataclasses.dataclass
 class PBitMachine:
-    """A (simulated) chip instance: graph + mismatch + programmable weights."""
+    """A (simulated) chip instance: graph + mismatch + programmable weights.
+
+    With a dense `Mismatch` the machine programs the full analog model and
+    attaches the Chimera-native slot view (a gather — bit-identical
+    entries), so every backend runs on the same physics.  With a
+    `SparseMismatch` (create(..., sparse=True)) nothing O(n²) is ever
+    built: the machine only supports the sparse backends, which is the
+    point — it instantiates at lattice sizes where the dense model cannot.
+    """
 
     graph: ChimeraGraph
     hw: HardwareConfig
-    mismatch: Mismatch
+    mismatch: Mismatch | SparseMismatch
     beta: float = 1.0
     noise: str = "philox"   # "philox" | "counter" | "lfsr"
-    backend: str = "auto"   # sampling backend: auto | ref | pallas | fused
+    backend: str = "auto"   # auto | ref | pallas | fused | sparse | fused_sparse
     w_scale: float = 0.05  # weight-LSB -> coupling units (ext. resistor knob)
 
     @staticmethod
     def create(graph: ChimeraGraph, key: jax.Array,
-               hw: HardwareConfig | None = None, **kw) -> "PBitMachine":
+               hw: HardwareConfig | None = None, sparse: bool = False,
+               **kw) -> "PBitMachine":
         hw = hw or HardwareConfig()
-        return PBitMachine(
-            graph=graph, hw=hw,
-            mismatch=sample_mismatch(key, graph.n_nodes, hw), **kw)
+        if sparse:
+            nbr_idx, _ = graph.neighbor_table()
+            mism = sample_mismatch_sparse(key, graph.n_nodes,
+                                          nbr_idx.shape[0], hw)
+            # sparse-native chips have no dense W: the dense backends
+            # cannot run them, so don't let "auto" resolve to one
+            kw.setdefault("backend", "sparse")
+        else:
+            mism = sample_mismatch(key, graph.n_nodes, hw)
+        return PBitMachine(graph=graph, hw=hw, mismatch=mism, **kw)
+
+    @property
+    def sparse_native(self) -> bool:
+        """True when only the O(D·n) slot model exists (no dense W ever)."""
+        return isinstance(self.mismatch, SparseMismatch)
+
+    def neighbor_tables(self):
+        """(nbr_idx, nbr_mask, slot_ij, slot_ji), cached per machine."""
+        nt = getattr(self, "_nbr_tables", None)
+        if nt is None:
+            nbr_idx, nbr_mask = self.graph.neighbor_table()
+            slot_ij, slot_ji = self.graph.edge_slots(nbr_idx)
+            nt = (nbr_idx, nbr_mask, slot_ij, slot_ji)
+            self._nbr_tables = nt
+        return nt
 
     # -- programming ----------------------------------------------------
     def program(self, J_codes: jax.Array, h_codes: jax.Array,
                 enable: jax.Array | None = None) -> EffectiveChip:
-        adj = jnp.asarray(self.graph.adjacency())
+        """Program dense (n, n) symmetric codes (chip-scale convenience)."""
+        nbr_idx, nbr_mask, _, _ = self.neighbor_tables()
         if enable is None:
             enable = jnp.abs(J_codes) > 0
-        chip = program_weights(J_codes, h_codes, enable, self.mismatch,
-                               self.hw, adjacency=adj)
+        if self.sparse_native:
+            rows = jnp.arange(self.graph.n_nodes)[None, :]
+            idx = jnp.asarray(nbr_idx)
+            chip = program_weights_sparse(
+                jnp.asarray(J_codes)[rows, idx], h_codes,
+                jnp.asarray(enable)[rows, idx], self.mismatch, self.hw,
+                idx, jnp.asarray(nbr_mask))
+        else:
+            adj = jnp.asarray(self.graph.adjacency())
+            chip = program_weights(J_codes, h_codes, enable, self.mismatch,
+                                   self.hw, adjacency=adj,
+                                   neighbors=jnp.asarray(nbr_idx))
+        return self._scale(chip)
+
+    def program_edges(self, J_edge_codes: jax.Array, h_codes: jax.Array
+                      ) -> EffectiveChip:
+        """Program per-edge codes (E,) — the CD master-weight layout.
+
+        Sparse-native machines scatter straight into the (D, n) slot
+        layout (two O(E) scatters, one per coupler direction); dense
+        machines scatter to the symmetric (n, n) code matrix first.
+        """
+        nbr_idx, nbr_mask, slot_ij, slot_ji = self.neighbor_tables()
+        e = self.graph.edges
+        codes = jnp.asarray(J_edge_codes)
+        if self.sparse_native:
+            D = nbr_idx.shape[0]
+            n = self.graph.n_nodes
+            J_slots = (jnp.zeros((D, n), codes.dtype)
+                       .at[slot_ij, e[:, 0]].set(codes)
+                       .at[slot_ji, e[:, 1]].set(codes))
+            chip = program_weights_sparse(
+                J_slots, h_codes, jnp.abs(J_slots) > 0, self.mismatch,
+                self.hw, jnp.asarray(nbr_idx), jnp.asarray(nbr_mask))
+            return self._scale(chip)
+        n = self.graph.n_nodes
+        J = (jnp.zeros((n, n), codes.dtype)
+             .at[e[:, 0], e[:, 1]].set(codes)
+             .at[e[:, 1], e[:, 0]].set(codes))
+        return self.program(J, h_codes)
+
+    def program_master(self, Jm: jax.Array, hm: jax.Array) -> EffectiveChip:
+        """Quantize float master weights — edge-list (E,) or dense (n, n) —
+        to 8-bit DAC codes and program."""
+        Jm = jnp.asarray(Jm)
+        if Jm.ndim == 1:
+            return self.program_edges(quantize_codes(Jm), quantize_codes(hm))
+        return self.program(quantize_codes(Jm), quantize_codes(hm))
+
+    def _scale(self, chip: EffectiveChip) -> EffectiveChip:
         # external-resistor scale: DAC LSB units -> neuron-input units
-        return dataclasses.replace(
-            chip, W=chip.W * self.w_scale, h=chip.h * self.w_scale)
+        upd = {"h": chip.h * self.w_scale}
+        if chip.W is not None:
+            upd["W"] = chip.W * self.w_scale
+        if chip.nbr_w is not None:
+            upd["nbr_w"] = chip.nbr_w * self.w_scale
+        return dataclasses.replace(chip, **upd)
 
     def noise_fn(self, key: jax.Array, batch: int):
         if self.noise == "lfsr":
@@ -116,9 +206,13 @@ def make_cd_step(machine: PBitMachine, cfg: CDConfig,
                  visible_idx: np.ndarray):
     """Build the jitted one-epoch CD update.
 
-    Returns step(Jm, hm, data_vis, m, noise_state) ->
-      (Jm, hm, m, noise_state, metrics) where Jm/hm are float master weights,
-    data_vis is (chains, n_visible) ±1 data samples for the positive phase.
+    Returns step(Jm, hm, data_vis, m, noise_state, vel) ->
+      (Jm, hm, m, noise_state, vel, metrics) where Jm is the (n_edges,)
+    float master couplings (one per physical coupler — no (n, n) matrix
+    anywhere in the update), hm the (n,) master biases, and data_vis
+    (chains, n_visible) ±1 data samples for the positive phase.  The CD
+    gradient is already an edge-list quantity (<m_i m_j>+ - <m_i m_j>-),
+    so the weight update is a pure O(E) axpy.
     """
     g = machine.graph
     edges = jnp.asarray(g.edges)
@@ -126,7 +220,6 @@ def make_cd_step(machine: PBitMachine, cfg: CDConfig,
     n = g.n_nodes
     vis = jnp.asarray(visible_idx)
     clamp_mask = jnp.zeros((n,), bool).at[vis].set(True)
-    e0, e1 = edges[:, 0], edges[:, 1]
 
     # the noise *step* fn is static (closed over scatter tables); the noise
     # *state* threads through `step` as a carry.
@@ -134,7 +227,7 @@ def make_cd_step(machine: PBitMachine, cfg: CDConfig,
 
     @jax.jit
     def step(Jm, hm, data_vis, m, noise_state, vel):
-        chip = machine.program(quantize_codes(Jm), quantize_codes(hm))
+        chip = machine.program_edges(quantize_codes(Jm), quantize_codes(hm))
         clamp_values = jnp.zeros((cfg.chains, n), jnp.float32)
         clamp_values = clamp_values.at[:, vis].set(data_vis)
 
@@ -155,13 +248,8 @@ def make_cd_step(machine: PBitMachine, cfg: CDConfig,
         vel_J, vel_h = vel
         vel_J = cfg.momentum * vel_J + gJ
         vel_h = cfg.momentum * vel_h + gh
-        dJ_edge = cfg.lr * vel_J
-        dh = cfg.lr * cfg.h_lr_scale * vel_h
-        dJ = jnp.zeros((n, n), jnp.float32)
-        dJ = dJ.at[e0, e1].add(dJ_edge)
-        dJ = dJ.at[e1, e0].add(dJ_edge)
-        Jm = (1.0 - cfg.weight_decay) * Jm + dJ
-        hm = (1.0 - cfg.weight_decay) * hm + dh
+        Jm = (1.0 - cfg.weight_decay) * Jm + cfg.lr * vel_J
+        hm = (1.0 - cfg.weight_decay) * hm + cfg.lr * cfg.h_lr_scale * vel_h
         Jm = jnp.clip(Jm, WMIN, WMAX)
         hm = jnp.clip(hm, WMIN, WMAX)
         metrics = {
@@ -177,26 +265,45 @@ def sample_visible_dist(machine: PBitMachine, Jm, hm,
                         visible_idx: np.ndarray, key: jax.Array,
                         chains: int = 256, sweeps: int = 200,
                         burn_in: int = 20) -> np.ndarray:
-    """Free-run the programmed chip and histogram the visible marginal."""
+    """Free-run the programmed chip and histogram the visible marginal.
+
+    Jm may be edge-list (E,) or dense (n, n) float master weights.  The
+    histogram streams (pbit.gibbs_visible_hist): on the scan backends it
+    folds into the sweep loop, on the fused backends it accumulates inside
+    the kernel — the (sweeps, chains, N) trajectory never materializes.
+    """
     g = machine.graph
-    chip = machine.program(quantize_codes(Jm), quantize_codes(hm))
+    chip = machine.program_master(Jm, hm)
     k1, k2 = jax.random.split(key)
     m0 = pbit.random_spins(k1, chains, g.n_nodes)
     noise_state, noise_fn = machine.noise_fn(k2, chains)
     betas = jnp.full((sweeps,), machine.beta, jnp.float32)
-    _, _, traj = pbit.gibbs_sample(
-        chip, jnp.asarray(g.color), m0, betas, noise_state, noise_fn,
-        collect=True, backend=machine.backend)
-    samples = np.asarray(traj[burn_in:]).reshape(-1, g.n_nodes)
-    return energy_mod.empirical_visible_dist(samples, visible_idx)
+    counts, _, _ = pbit.gibbs_visible_hist(
+        chip, jnp.asarray(g.color), m0, betas, burn_in, noise_state,
+        noise_fn, visible_idx, backend=machine.backend)
+    counts = np.asarray(counts, np.float64)
+    return counts / max(counts.sum(), 1.0)
 
 
 @dataclasses.dataclass
 class CDResult:
-    Jm: np.ndarray
+    """Learned master weights.  ``J_edges`` is the native (E,) edge-list
+    form; ``Jm`` reconstructs the symmetric dense matrix for small-n
+    reporting and eval."""
+
+    J_edges: np.ndarray
     hm: np.ndarray
     kl_history: list
     metric_history: list
+    edges: np.ndarray
+    n_nodes: int
+
+    @property
+    def Jm(self) -> np.ndarray:
+        J = np.zeros((self.n_nodes, self.n_nodes), np.float32)
+        J[self.edges[:, 0], self.edges[:, 1]] = self.J_edges
+        J[self.edges[:, 1], self.edges[:, 0]] = self.J_edges
+        return J
 
 
 def train_cd(
@@ -214,7 +321,7 @@ def train_cd(
     step = make_cd_step(machine, cfg, visible_idx)
 
     key, k1, k2, k3 = jax.random.split(key, 4)
-    Jm = jnp.zeros((n, n), jnp.float32)
+    Jm = jnp.zeros((g.n_edges,), jnp.float32)
     hm = jnp.zeros((n,), jnp.float32)
     m = pbit.random_spins(k1, cfg.chains, n)
     noise_state, _ = machine.noise_fn(k2, cfg.chains)
@@ -239,4 +346,5 @@ def train_cd(
             if verbose:
                 print(f"epoch {epoch+1:4d}  KL={kl:.4f}  "
                       f"corr_err={met_hist[-1]['corr_err']:.4f}")
-    return CDResult(np.asarray(Jm), np.asarray(hm), kl_hist, met_hist)
+    return CDResult(np.asarray(Jm), np.asarray(hm), kl_hist, met_hist,
+                    edges=np.asarray(g.edges), n_nodes=n)

@@ -81,6 +81,55 @@ class ChimeraGraph:
         e = self.edges
         return bool(np.all(self.color[e[:, 0]] != self.color[e[:, 1]]))
 
+    # -- fixed-degree sparse layout -------------------------------------
+    def neighbor_table(self) -> tuple[np.ndarray, np.ndarray]:
+        """Fixed-degree neighbor table (ELL layout) of the coupler set.
+
+        Returns ``(nbr_idx, nbr_mask)``, both ``(D, n_nodes)`` with
+        D = max degree (k + 2 on an unmasked Chimera: k in-cell K_{k,k}
+        partners + 2 chain couplers).  ``nbr_idx[d, i]`` is node i's d-th
+        neighbor in ascending node order; unused slots point at i itself
+        (mask False) so gathers stay in bounds and gathered weights are 0.
+        Ascending order matters: it makes the slot-major sparse sum visit
+        nonzeros in the same order as a sequential dense row reduction,
+        which is what keeps the sparse backends bit-exact vs the dense ref
+        (zeros are additive identities).
+
+        Built from the edge list in O(E) — never materializes the dense
+        adjacency, so it scales to lattices where (N, N) does not fit.
+        """
+        e = self.edges
+        src = np.concatenate([e[:, 0], e[:, 1]])
+        dst = np.concatenate([e[:, 1], e[:, 0]])
+        order = np.lexsort((dst, src))
+        src, dst = src[order], dst[order]
+        deg = np.bincount(src, minlength=self.n_nodes)
+        max_deg = int(deg.max()) if deg.size else 0
+        D = max(max_deg, 1)
+        starts = np.concatenate([[0], np.cumsum(deg)[:-1]])
+        slot = np.arange(src.size) - starts[src]
+        nbr_idx = np.tile(np.arange(self.n_nodes, dtype=np.int32), (D, 1))
+        nbr_mask = np.zeros((D, self.n_nodes), dtype=bool)
+        nbr_idx[slot, src] = dst
+        nbr_mask[slot, src] = True
+        return nbr_idx, nbr_mask
+
+    def edge_slots(self, nbr_idx: np.ndarray | None = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-edge slot coordinates in the neighbor table.
+
+        For edge e = (i, j): ``slot_ij[e]`` is the row d with
+        ``nbr_idx[d, i] == j`` and ``slot_ji[e]`` the row with
+        ``nbr_idx[d, j] == i`` — the two directed entries every undirected
+        coupler owns in the (D, N) slot layout.
+        """
+        if nbr_idx is None:
+            nbr_idx, _ = self.neighbor_table()
+        e0, e1 = self.edges[:, 0], self.edges[:, 1]
+        slot_ij = np.argmax(nbr_idx[:, e0] == e1[None, :], axis=0)
+        slot_ji = np.argmax(nbr_idx[:, e1] == e0[None, :], axis=0)
+        return slot_ij.astype(np.int32), slot_ji.astype(np.int32)
+
 
 def make_chimera(
     rows: int,

@@ -131,14 +131,22 @@ class EffectiveChip:
     W is *directional*: W[i, j] is the current injected into node i per unit
     spin m_j (the shared-edge DAC value times node-i's multiplier gain), so
     in general W != W.T under mismatch, exactly as on silicon.
+
+    ``nbr_idx``/``nbr_w`` are the Chimera-native fixed-degree slot layout
+    (see ChimeraGraph.neighbor_table): ``nbr_w[d, i] = W[i, nbr_idx[d, i]]``.
+    A chip may carry both views (dense programming + `attach_sparse`), or
+    only the sparse one (`program_weights_sparse`, W=None) for lattices
+    where the dense (N, N) matrix cannot exist at all.
     """
 
-    W: jax.Array            # (N, N) effective couplings, weight-LSB units
+    W: jax.Array | None     # (N, N) effective couplings, weight-LSB units
     h: jax.Array            # (N,)  effective biases
     tanh_gain: jax.Array    # (N,)  multiplicative on beta
     tanh_offset: jax.Array  # (N,)  additive current offset
     rand_gain: jax.Array    # (N,)
     comp_offset: jax.Array  # (N,)
+    nbr_idx: jax.Array | None = None  # (D, N) int32 neighbor table
+    nbr_w: jax.Array | None = None    # (D, N) per-slot couplings
 
     def tree_flatten(self):
         fields = dataclasses.fields(self)
@@ -150,7 +158,12 @@ class EffectiveChip:
 
     @property
     def n_nodes(self) -> int:
-        return self.W.shape[-1]
+        return self.h.shape[-1]
+
+    @property
+    def degree(self) -> int:
+        """Slot count D of the sparse layout (0 when dense-only)."""
+        return 0 if self.nbr_idx is None else int(self.nbr_idx.shape[0])
 
 
 def program_weights(
@@ -160,12 +173,15 @@ def program_weights(
     mism: Mismatch,
     cfg: HardwareConfig,
     adjacency: jax.Array | None = None,
+    neighbors: jax.Array | None = None,
 ) -> EffectiveChip:
     """Compile digital (int8) weights into effective analog quantities.
 
     J: (N, N) symmetric int8 codes; h: (N,) int8 codes;
     enable: (N, N) bool coupler-enable bits; adjacency: (N, N) bool physical
-    couplers (no current path at all where False).
+    couplers (no current path at all where False); neighbors: optional
+    (D, N) neighbor table — when given, the sparse slot view is attached to
+    the returned chip (a gather of the final W, bit-identical entries).
     """
     J = jnp.asarray(J)
     n = J.shape[0]
@@ -180,7 +196,7 @@ def program_weights(
     if cfg.compression > 0.0:
         Wdir = Wdir / (1.0 + cfg.compression * jnp.abs(Wdir))
     h_eff = dac_transfer(h, mism.dac_bit_h)
-    return EffectiveChip(
+    chip = EffectiveChip(
         W=Wdir.astype(jnp.float32),
         h=h_eff.astype(jnp.float32),
         tanh_gain=1.0 + mism.tanh_gain,
@@ -188,10 +204,137 @@ def program_weights(
         rand_gain=1.0 + mism.rand_gain,
         comp_offset=mism.comp_offset,
     )
+    if neighbors is not None:
+        chip = attach_sparse(chip, neighbors)
+    return chip
+
+
+def attach_sparse(chip: EffectiveChip, nbr_idx: jax.Array) -> EffectiveChip:
+    """Gather the dense W into the (D, N) slot layout.
+
+    ``nbr_w[d, i] = W[i, nbr_idx[d, i]]`` — bit-identical entries, so the
+    sparse backends sample the exact same physics as the dense ones.
+    Self-pointing padding slots read the (zero) diagonal.
+    """
+    idx = jnp.asarray(nbr_idx)
+    rows = jnp.arange(chip.n_nodes)[None, :]
+    nbr_w = chip.W[rows, idx].astype(jnp.float32)
+    return dataclasses.replace(chip, nbr_idx=idx.astype(jnp.int32),
+                               nbr_w=nbr_w)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseMismatch:
+    """Per-instance variation in the fixed-degree slot layout.
+
+    Pair fields are (D, N) — one entry per physical coupler *direction*
+    (slot d of node i), exactly the entries the dense (N, N) model carries
+    on the Chimera adjacency; everything off-graph, which the dense model
+    samples and then masks to zero, is simply never sampled.  O(D·N)
+    memory, so chip instances exist at lattice sizes where the dense
+    Mismatch (N² and N²·8 arrays) cannot.
+    """
+
+    dac_bit_j: jax.Array      # (D, N, 8) per-bit branch error for J DACs
+    dac_bit_h: jax.Array      # (N, 8)
+    edge_gain: jax.Array      # (D, N) directional multiplier gain error
+    tanh_gain: jax.Array      # (N,)
+    tanh_offset: jax.Array    # (N,)
+    rand_gain: jax.Array      # (N,)
+    comp_offset: jax.Array    # (N,)
+    leak: jax.Array           # (D, N) leakage of disabled couplers
+
+    def tree_flatten(self):
+        fields = dataclasses.fields(self)
+        return tuple(getattr(self, f.name) for f in fields), None
+
+    @classmethod
+    def tree_unflatten(cls, aux: Any, children):
+        return cls(*children)
+
+
+def sample_mismatch_sparse(
+    key: jax.Array, n_nodes: int, degree: int, cfg: HardwareConfig
+) -> SparseMismatch:
+    """Draw one chip instance's process variation, slot layout (O(D·N))."""
+    ks = jax.random.split(key, 8)
+    n, d = n_nodes, degree
+
+    def g(k, shape, sigma):
+        if sigma == 0.0:
+            return jnp.zeros(shape, dtype=jnp.float32)
+        return sigma * jax.random.normal(k, shape, dtype=jnp.float32)
+
+    return SparseMismatch(
+        dac_bit_j=g(ks[0], (d, n, 8), cfg.sigma_dac_bit),
+        dac_bit_h=g(ks[1], (n, 8), cfg.sigma_dac_bit),
+        edge_gain=g(ks[2], (d, n), cfg.sigma_edge_gain),
+        tanh_gain=g(ks[3], (n,), cfg.sigma_tanh_gain),
+        tanh_offset=g(ks[4], (n,), cfg.sigma_tanh_offset),
+        rand_gain=g(ks[5], (n,), cfg.sigma_rand_gain),
+        comp_offset=g(ks[6], (n,), cfg.sigma_comp_offset),
+        leak=jnp.abs(g(ks[7], (d, n), cfg.leak_frac)),
+    )
+
+
+def gather_mismatch(mism: Mismatch, nbr_idx: jax.Array) -> SparseMismatch:
+    """Dense (N, N) mismatch -> (D, N) slot layout (for parity tests)."""
+    idx = jnp.asarray(nbr_idx)
+    rows = jnp.arange(mism.tanh_gain.shape[0])[None, :]
+    return SparseMismatch(
+        dac_bit_j=mism.dac_bit_j[rows, idx],
+        dac_bit_h=mism.dac_bit_h,
+        edge_gain=mism.edge_gain[rows, idx],
+        tanh_gain=mism.tanh_gain,
+        tanh_offset=mism.tanh_offset,
+        rand_gain=mism.rand_gain,
+        comp_offset=mism.comp_offset,
+        leak=mism.leak[rows, idx],
+    )
+
+
+def program_weights_sparse(
+    J_slots: jax.Array,
+    h: jax.Array,
+    enable_slots: jax.Array,
+    mism: SparseMismatch,
+    cfg: HardwareConfig,
+    nbr_idx: jax.Array,
+    nbr_mask: jax.Array,
+) -> EffectiveChip:
+    """Sparse-native programming: slot codes -> EffectiveChip with W=None.
+
+    J_slots/enable_slots: (D, N) int8 codes / enable bits in the neighbor
+    table layout; nbr_mask marks physical couplers (padding slots carry no
+    current path, mirroring the dense adjacency mask).  The elementwise
+    analog chain is applied in the same order as `program_weights`, so with
+    a gathered dense mismatch the resulting nbr_w is bit-identical to
+    gathering the densely programmed W.  Never touches O(N²) memory.
+    """
+    J = jnp.asarray(J_slots)
+    Wdac = dac_transfer(J, mism.dac_bit_j)
+    Wdir = Wdac * (1.0 + mism.edge_gain)
+    Wdir = jnp.where(enable_slots, Wdir, jnp.sign(Wdir) * mism.leak * 128.0)
+    Wdir = jnp.where(nbr_mask, Wdir, 0.0)
+    if cfg.compression > 0.0:
+        Wdir = Wdir / (1.0 + cfg.compression * jnp.abs(Wdir))
+    h_eff = dac_transfer(h, mism.dac_bit_h)
+    return EffectiveChip(
+        W=None,
+        h=h_eff.astype(jnp.float32),
+        tanh_gain=1.0 + mism.tanh_gain,
+        tanh_offset=mism.tanh_offset,
+        rand_gain=1.0 + mism.rand_gain,
+        comp_offset=mism.comp_offset,
+        nbr_idx=jnp.asarray(nbr_idx, jnp.int32),
+        nbr_w=Wdir.astype(jnp.float32),
+    )
 
 
 def ideal_chip(J: jax.Array, h: jax.Array,
-               adjacency: jax.Array | None = None) -> EffectiveChip:
+               adjacency: jax.Array | None = None,
+               neighbors: jax.Array | None = None) -> EffectiveChip:
     """Zero-mismatch chip from float or int weights (the textbook p-bit)."""
     J = jnp.asarray(J, dtype=jnp.float32)
     n = J.shape[0]
@@ -199,7 +342,7 @@ def ideal_chip(J: jax.Array, h: jax.Array,
     if adjacency is not None:
         W = jnp.where(adjacency, W, 0.0)
     ones = jnp.ones((n,), dtype=jnp.float32)
-    return EffectiveChip(
+    chip = EffectiveChip(
         W=W,
         h=jnp.asarray(h, dtype=jnp.float32),
         tanh_gain=ones,
@@ -207,6 +350,9 @@ def ideal_chip(J: jax.Array, h: jax.Array,
         rand_gain=ones,
         comp_offset=0.0 * ones,
     )
+    if neighbors is not None:
+        chip = attach_sparse(chip, neighbors)
+    return chip
 
 
 def measure_node_transfer(

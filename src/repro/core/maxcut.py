@@ -22,7 +22,17 @@ from repro.core.chimera import ChimeraGraph
 @dataclasses.dataclass(frozen=True)
 class MaxCutProblem:
     edges: np.ndarray    # (E, 2) node ids (subset of chimera edges)
-    weights: np.ndarray  # (E,) positive weights
+    weights: np.ndarray  # (E,) positive weights, float32
+
+    def __post_init__(self):
+        # float32 throughout: weights meet jnp arrays downstream, and a
+        # float64 store would silently downcast there (x64 is disabled by
+        # default).  Cut values stay exact — the paper's instances use
+        # small integer weights, exactly representable in float32.
+        object.__setattr__(self, "edges",
+                           np.asarray(self.edges, np.int32))
+        object.__setattr__(self, "weights",
+                           np.asarray(self.weights, np.float32))
 
     @property
     def n_edges(self) -> int:
@@ -45,7 +55,7 @@ def random_chimera_maxcut(graph: ChimeraGraph, key: jax.Array,
         w = np.asarray(jax.random.randint(k2, (edges.shape[0],), 1, 4))
     else:
         w = np.ones((edges.shape[0],))
-    return MaxCutProblem(edges=edges, weights=w.astype(np.float64))
+    return MaxCutProblem(edges=edges, weights=w.astype(np.float32))
 
 
 def maxcut_codes(problem: MaxCutProblem, n_nodes: int,

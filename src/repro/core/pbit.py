@@ -23,6 +23,15 @@ Execution backends (see docs/kernels.md):
   * "fused"  — the sweep-resident engine (kernels/sweep_fused): S sweeps per
                kernel launch, spins in VMEM, noise generated in-kernel, CD
                moments accumulated on-line.  Needs "counter" or "lfsr" noise.
+  * "sparse" — jnp scan like "ref", but eqn 1 is the Chimera-native
+               fixed-degree gather (≤6 neighbors/node) instead of the dense
+               matmul.  Needs a chip carrying the slot layout
+               (hardware.attach_sparse / program_weights_sparse).
+  * "fused_sparse" — the sweep-resident engine on the slot layout: D
+               lane-gathers replace the (B,N)x(N,N) matmul and the moment
+               scratch shrinks from the (N,N) Gram to (D,N) per-slot edge
+               correlations, which is what lets ≥32k-spin lattices stay
+               VMEM-resident.  Needs "counter" or "lfsr" noise.
 Selected per call via the ``backend=`` argument, or globally via the
 REPRO_PBIT_BACKEND environment variable (used when backend is None/"auto").
 """
@@ -42,7 +51,8 @@ from repro.core.hardware import EffectiveChip
 
 NoiseFn = Callable[[jax.Array], tuple[jax.Array, jax.Array]]
 
-BACKENDS = ("ref", "pallas", "fused")
+BACKENDS = ("ref", "pallas", "fused", "sparse", "fused_sparse")
+FUSED_BACKENDS = ("fused", "fused_sparse")
 
 
 def resolve_backend(backend: str | None = None) -> str:
@@ -149,6 +159,11 @@ def make_lfsr_noise(graph: ChimeraGraph, batch: int, decimation: int = 8
 # ---------------------------------------------------------------------------
 def neuron_input(m: jax.Array, chip: EffectiveChip) -> jax.Array:
     """Eqn 1 for every node: I = m @ W^T + h.  m: (B, N) in {-1, +1}."""
+    if chip.W is None:
+        raise ValueError(
+            "this chip carries only the sparse slot layout (W=None); use a "
+            "sparse backend ('sparse' or 'fused_sparse'), e.g. "
+            "PBitMachine(backend='sparse') or REPRO_PBIT_BACKEND=sparse")
     return m @ chip.W.T + chip.h
 
 
@@ -216,6 +231,10 @@ def _resolve_kernel(backend: str, kernel: Callable | None) -> Callable | None:
     if backend == "pallas":
         from repro.kernels import ops as kernel_ops
         return kernel_ops.make_kernel_half_sweep()
+    if backend in ("sparse", "fused_sparse"):
+        # "fused_sparse" lands here only on the collect=True fallback
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.sparse_half_sweep
     return None  # "ref" (and "fused" fallbacks) use the jnp half_sweep
 
 
@@ -245,12 +264,13 @@ def gibbs_sample(
     backend = resolve_backend(backend)
     # an explicit kernel= always wins (custom half-sweep injection): the
     # fused engine could not honor it, so fall through to the scan path
-    if backend == "fused" and not collect and kernel is None:
+    if backend in FUSED_BACKENDS and not collect and kernel is None:
         from repro.kernels import ops as kernel_ops
         m, ns = kernel_ops.fused_sweeps(
             init_m, chip, color, betas, noise_state,
             getattr(noise_fn, "spec", None),
-            clamp_mask=clamp_mask, clamp_values=clamp_values)
+            clamp_mask=clamp_mask, clamp_values=clamp_values,
+            sparse=(backend == "fused_sparse"))
         return m, ns, None
 
     sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
@@ -284,26 +304,34 @@ def gibbs_stats(
 
     Returns (mean_spin[N], mean_edge_corr[E], final_m, noise_state), with
     moments averaged over chains and post-burn-in sweeps — exactly the
-    statistics contrastive divergence needs.  With backend="fused" the whole
-    phase (every sweep AND the moment accumulation) is one kernel launch:
-    per-sweep spins never touch HBM; edge correlations are read out of the
-    accumulated m^T m Gram matrix.
+    statistics contrastive divergence needs.  With backend="fused" (or
+    "fused_sparse") the whole phase (every sweep AND the moment
+    accumulation) is one kernel launch: per-sweep spins never touch HBM;
+    edge correlations are read out of the accumulated m^T m Gram matrix
+    (dense) or the (D, N) per-slot correlation table (sparse).
     """
     backend = resolve_backend(backend)
     e0, e1 = edges[:, 0], edges[:, 1]
     betas = jnp.full((n_sweeps,), beta, dtype=jnp.float32)
     denom = jnp.maximum(n_sweeps - burn_in, 1).astype(jnp.float32)
 
-    if backend == "fused" and kernel is None:
+    if backend in FUSED_BACKENDS and kernel is None:
         from repro.kernels import ops as kernel_ops
+        sparse = backend == "fused_sparse"
         measured = (jnp.arange(n_sweeps) >= burn_in).astype(jnp.float32)
         m, ns, s_sum, c_sum = kernel_ops.fused_sweeps(
             init_m, chip, color, betas, noise_state,
             getattr(noise_fn, "spec", None),
             clamp_mask=clamp_mask, clamp_values=clamp_values,
-            measured=measured)
+            measured=measured, sparse=sparse)
         scale = denom * init_m.shape[0]
-        return s_sum / scale, c_sum[e0, e1] / scale, m, ns
+        if sparse:
+            # edge (i, j) lives at slot row d with nbr_idx[d, i] == j
+            slot = jnp.argmax(chip.nbr_idx[:, e0] == e1[None, :], axis=0)
+            c_edge = c_sum[slot, e0]
+        else:
+            c_edge = c_sum[e0, e1]
+        return s_sum / scale, c_edge / scale, m, ns
 
     sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
                           _resolve_kernel(backend, kernel))
@@ -326,6 +354,66 @@ def gibbs_stats(
     )
     (state, s_sum, c_sum), _ = jax.lax.scan(body, init, (betas, measured))
     return s_sum / denom, c_sum / denom, state.m, state.noise_state
+
+
+def gibbs_visible_hist(
+    chip: EffectiveChip,
+    color: jax.Array,
+    init_m: jax.Array,
+    betas: jax.Array,
+    burn_in: int,
+    noise_state: jax.Array,
+    noise_fn: NoiseFn,
+    visible_idx: np.ndarray,
+    backend: str | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Free-run and histogram the visible bit patterns, streaming.
+
+    Returns (counts[2^nv], final_m, noise_state): counts[c] is the number
+    of (chain, post-burn-in sweep) samples whose visible spins encode c
+    (energy.empirical_visible_dist code order).  The scan backends fold the
+    histogram into the sweep loop; the fused backends accumulate it inside
+    the kernel — either way the (sweeps, B, N) trajectory never
+    materializes, unlike the old `gibbs_sample(collect=True)` route.
+    """
+    backend = resolve_backend(backend)
+    visible_idx = np.asarray(visible_idx)
+    nv = int(visible_idx.shape[0])
+    n_sweeps = betas.shape[0]
+    measured = (jnp.arange(n_sweeps) >= burn_in).astype(jnp.float32)
+
+    if backend in FUSED_BACKENDS:
+        from repro.kernels import ops as kernel_ops
+        from repro.kernels.sweep_fused import MAX_HIST_VISIBLE
+        spec = getattr(noise_fn, "spec", None)
+        # host noise (philox) or an oversized visible set cannot histogram
+        # in-kernel: fall back to the scan path, like collect=True used to
+        if (spec is not None and spec.kind in ("counter", "lfsr")
+                and nv <= MAX_HIST_VISIBLE):
+            m, ns, hist = kernel_ops.fused_visible_hist(
+                init_m, chip, color, betas, noise_state, spec, visible_idx,
+                measured, sparse=(backend == "fused_sparse"))
+            return hist, m, ns
+
+    sweep = make_sweep_fn(chip, color, noise_fn, None, None,
+                          _resolve_kernel(backend, None))
+    vis = jnp.asarray(visible_idx)
+    pow2 = jnp.asarray(2 ** np.arange(nv), jnp.int32)
+
+    def body(carry, inp):
+        state, hist = carry
+        beta_t, w = inp
+        state = sweep(state, beta_t)
+        codes = jnp.sum((state.m[:, vis] > 0).astype(jnp.int32) * pow2,
+                        axis=1)
+        # scatter-add, not a (B, 2^nv) one-hot: this path is the fallback
+        # for visible sets too wide for the in-kernel histogram
+        return (state, hist.at[codes].add(w)), None
+
+    init = (SweepCarry(init_m, noise_state),
+            jnp.zeros((2 ** nv,), jnp.float32))
+    (state, hist), _ = jax.lax.scan(body, init, (betas, measured))
+    return hist, state.m, state.noise_state
 
 
 def random_spins(key: jax.Array, batch: int, n_nodes: int) -> jax.Array:

@@ -23,6 +23,36 @@ def pbit_half_sweep_ref(m, W, h, gain, off, rand_gain, comp_off,
     return jnp.where(update_mask, new, m)
 
 
+def sparse_neuron_input(m, nbr_idx, nbr_w, h):
+    """Eqn 1 on the fixed-degree slot layout: I = Σ_d w_d ⊙ m[:, idx_d] + h.
+
+    m: (B, N); nbr_idx/nbr_w: (D, N) neighbor table (ChimeraGraph.
+    neighbor_table + hardware.attach_sparse).  O(B·N·D) instead of the dense
+    O(B·N²) matmul.  Slots accumulate in ascending-d order — the identical
+    op order the sparse Pallas kernel uses, so ref and kernel agree bit for
+    bit; with neighbors sorted ascending it also reproduces the dense
+    sequential row reduction exactly (zeros are additive identities).
+    """
+    D = nbr_idx.shape[0]
+    acc = jnp.zeros(m.shape, jnp.float32)
+    for d in range(D):
+        acc = acc + nbr_w[d][None, :] * jnp.take(m, nbr_idx[d], axis=1)
+    return acc + h
+
+
+def pbit_sparse_half_sweep_ref(m, nbr_idx, nbr_w, h, gain, off, rand_gain,
+                               comp_off, update_mask, beta, u):
+    """`pbit_half_sweep_ref` with the degree-D gather replacing the matmul."""
+    beta = jnp.asarray(beta, jnp.float32)
+    if beta.ndim == 1:
+        beta = beta[:, None]
+    I = sparse_neuron_input(m, nbr_idx, nbr_w, h)
+    act = jnp.tanh(beta * gain * (I + off))
+    decision = act + rand_gain * u + comp_off
+    new = jnp.where(decision >= 0.0, 1.0, -1.0).astype(m.dtype)
+    return jnp.where(update_mask, new, m)
+
+
 def lattice_vertical_update_ref(m_v, m_h, m_v_up, m_v_dn, W_vh, wv_up,
                                 wv_dnin, h, gain, u, parity, color):
     """Oracle for kernels/lattice_update.py (pure jnp)."""

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: sweep-resident sampling engine.
+"""Pallas TPU kernel: sweep-resident sampling engine (dense + block-sparse).
 
 The chip's figure of merit is flips per nanosecond: all 440 neurons settle
 in parallel with per-cell LFSR noise generated *in place*.  The per-half-
@@ -13,20 +13,35 @@ kernel closes that gap: one invocation executes S full chromatic sweeps
     core/lfsr.py::counter_uniform) or chip-faithful mode (the Galois LFSR of
     core/lfsr.py advanced in-kernel, including the bit-reversed-byte sharing
     trick, bit-exact with the host LFSR stream),
-  * optional on-line first/second moment accumulation (spin sums and the
-    full m^T m Gram matrix, MXU food) in VMEM scratch, so CD's
-    `gibbs_stats` never materializes per-sweep state in HBM.
+  * optional on-line first/second moment accumulation (spin sums and either
+    the full m^T m Gram matrix or, in sparse mode, the per-slot edge
+    correlations) in VMEM scratch, so CD's `gibbs_stats` never materializes
+    per-sweep state in HBM,
+  * optional on-line visible-pattern histogramming (one-hot reduction over
+    2^n_visible bins per sweep), so `sample_visible_dist` never collects a
+    trajectory.
+
+Two weight layouts share the kernel body:
+
+  * dense  (`sweep_fused_pallas`)  — W (N, N) in VMEM, neuron input is a
+    (tb, N) x (N, N) matmul.  W alone is 4·N² bytes, which bounds the
+    resident engine to roughly N <= 1.5k fp32 on a 16 MB-VMEM core.
+  * sparse (`sweep_sparse_pallas`) — the Chimera-native fixed-degree slot
+    layout (ChimeraGraph.neighbor_table): nbr_idx/nbr_w (D, N) with D = 6
+    on the chip's graph.  Neuron input is D lane-gathers + multiply-adds —
+    2·B·N·D FLOPs instead of 2·B·N², and 8·D·N weight bytes instead of
+    4·N², so ≥32k-spin lattices stay VMEM-resident.  Slots accumulate in
+    ascending-neighbor order, making the result bit-exact against both the
+    sparse jnp ref and (zeros being additive identities) the dense path.
 
 Grid: (B/tb,) over batch tiles; each program owns its rows for all S
-sweeps.  W lives fully in VMEM, which bounds the problem size to roughly
-N <= 1.5k fp32 on a 16 MB-VMEM core — the chip itself is N=440.  Larger N
-should fall back to the tiled per-half-sweep kernel (see docs/kernels.md).
-Moment scratch accumulates across the (sequential) batch-tile grid and is
-flushed to the output on the last program, the same revisiting pattern as
-the K-loop accumulator in pbit_update.py.
+sweeps.  Moment/histogram scratch accumulates across the (sequential)
+batch-tile grid and is flushed to the output on the last program, the same
+revisiting pattern as the K-loop accumulator in pbit_update.py.
 
 Validated bit-for-bit in interpret mode against a scan of the
-kernels/ref.py oracle with host-side noise (tests/test_sweep_fused.py).
+kernels/ref.py oracles with host-side noise (tests/test_sweep_fused.py,
+tests/test_sparse.py).
 """
 from __future__ import annotations
 
@@ -54,26 +69,40 @@ except ImportError:  # pragma: no cover
 NOISE_COUNTER = "counter"
 NOISE_LFSR = "lfsr"
 
+MAX_HIST_VISIBLE = 12  # one-hot reduction over 2^nv bins; keep it VMEM-sane
+
 
 def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
             noise_mode: str, has_clamp: bool, accumulate: bool,
-            decimation: int):
+            collect_hist: bool, decimation: int, sparse: bool, D: int,
+            NBp: int):
     it = iter(refs)
     m0_ref = next(it)
-    w_ref = next(it)
+    if sparse:
+        idx_ref = next(it)                    # (Dp, Np) neighbor table
+        w_ref = next(it)                      # (Dp, Np) slot weights
+    else:
+        w_ref = next(it)                      # (Np, Np) dense couplings
     h_ref, g_ref, off_ref, rg_ref, co_ref = (next(it) for _ in range(5))
     mask0_ref, mask1_ref = next(it), next(it)
     betas_ref = next(it)
     clampm_ref = next(it) if has_clamp else None
     clampv_ref = next(it) if has_clamp else None
-    meas_ref = next(it) if accumulate else None
+    meas_ref = next(it) if (accumulate or collect_hist) else None
+    vis_ref = next(it) if collect_hist else None   # (1, NVp) visible cols
+    pow_ref = next(it) if collect_hist else None   # (1, NVp) 2^k bin powers
     perm_ref = next(it) if noise_mode == NOISE_LFSR else None
     noise_in_ref = next(it)
     m_out_ref = next(it)
     noise_out_ref = next(it)
     if accumulate:
         ssum_out_ref, csum_out_ref = next(it), next(it)
+    if collect_hist:
+        hist_out_ref = next(it)
+    if accumulate:
         ssum_ref, csum_ref = next(it), next(it)
+    if collect_hist:
+        hist_ref = next(it)
 
     i = pl.program_id(0)
 
@@ -82,8 +111,13 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
         def _zero_moments():
             ssum_ref[...] = jnp.zeros_like(ssum_ref)
             csum_ref[...] = jnp.zeros_like(csum_ref)
+    if collect_hist:
+        @pl.when(i == 0)
+        def _zero_hist():
+            hist_ref[...] = jnp.zeros_like(hist_ref)
 
-    w = w_ref[...]
+    if not sparse:
+        w = w_ref[...]
     hrow, grow = h_ref[...], g_ref[...]
     offrow, rgrow, corow = off_ref[...], rg_ref[...], co_ref[...]
     masks = (mask0_ref[...] != 0, mask1_ref[...] != 0)
@@ -99,6 +133,18 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
         noise_carry0 = noise_in_ref[...]          # (tb, Cp) LFSR states
         perm_cols = perm_ref[0, :]                # node -> flat LFSR column
 
+    def neuron_current(m):
+        """Eqn 1 over the resident tile: matmul (dense) or D-slot gather."""
+        if sparse:
+            acc = jnp.zeros((tb, Np), jnp.float32)
+            for d in range(D):
+                acc = acc + w_ref[pl.ds(d, 1), :] * jnp.take(
+                    m, idx_ref[d, :], axis=-1)
+            return acc + hrow
+        return jax.lax.dot_general(
+            m, w, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) + hrow
+
     def one_sweep(s, carry):
         m, st = carry
         if has_clamp:
@@ -113,24 +159,40 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
                 st = lfsr_mod.lfsr_step_n(st, decimation)
                 u = jnp.take(lfsr_mod.flat_cell_uniforms(st), perm_cols,
                              axis=-1)
-            I = jax.lax.dot_general(
-                m, w, dimension_numbers=(((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32) + hrow
+            I = neuron_current(m)
             act = jnp.tanh(beta_col * grow * (I + offrow))
             decision = act + rgrow * u + corow
             new = jnp.where(decision >= 0.0, 1.0, -1.0)
             m = jnp.where(masks[c], new, m)
-        if accumulate:
+        if accumulate or collect_hist:
             wgt = meas_ref[pl.ds(s, 1), :]                      # (1, 1)
             # padded batch rows update like real chains; keep them out of
-            # the moments
+            # the statistics
             row_ids = (jax.lax.broadcasted_iota(jnp.int32, (tb, 1), 0)
                        + i * tb)
+        if accumulate:
             mv = jnp.where(row_ids < B, m, 0.0)
             ssum_ref[...] += wgt * jnp.sum(mv, axis=0, keepdims=True)
-            csum_ref[...] += wgt[0, 0] * jax.lax.dot_general(
-                mv, mv, dimension_numbers=(((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)             # m^T m
+            if sparse:
+                for d in range(D):
+                    corr = jnp.sum(
+                        mv * jnp.take(mv, idx_ref[d, :], axis=-1),
+                        axis=0, keepdims=True)                   # (1, Np)
+                    csum_ref[pl.ds(d, 1), :] += wgt[0, 0] * corr
+            else:
+                csum_ref[...] += wgt[0, 0] * jax.lax.dot_general(
+                    mv, mv, dimension_numbers=(((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)          # m^T m
+        if collect_hist:
+            mv_vis = jnp.take(m, vis_ref[0, :], axis=-1)        # (tb, NVp)
+            codes = jnp.sum(
+                jnp.where(mv_vis > 0, pow_ref[...], 0),
+                axis=1, keepdims=True)                           # (tb, 1)
+            bin_ids = jax.lax.broadcasted_iota(jnp.int32, (tb, NBp), 1)
+            onehot = ((codes == bin_ids)
+                      & (row_ids < B)).astype(jnp.float32)
+            hist_ref[...] += wgt[0, 0] * jnp.sum(onehot, axis=0,
+                                                 keepdims=True)
         return m, st
 
     m_fin, st_fin = jax.lax.fori_loop(
@@ -148,42 +210,19 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
         def _flush_moments():
             ssum_out_ref[...] = ssum_ref[...]
             csum_out_ref[...] = csum_ref[...]
+    if collect_hist:
+        @pl.when(i == n_b - 1)
+        def _flush_hist():
+            hist_out_ref[...] = hist_ref[...]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("noise_mode", "decimation", "gather_perm", "accumulate",
-                     "block_b", "interpret"),
-)
-def sweep_fused_pallas(
-    m: jax.Array,                 # (B, N) spins in {-1, +1}
-    W: jax.Array,                 # (N, N) directional couplings
-    h: jax.Array,
-    gain: jax.Array,
-    off: jax.Array,
-    rand_gain: jax.Array,
-    comp_off: jax.Array,
-    mask0: jax.Array,             # (N,) bool — color-0 update set (minus clamps)
-    mask1: jax.Array,             # (N,) bool — color-1 update set (minus clamps)
-    betas: jax.Array,             # (S, B) per-sweep, per-chain inverse temps
-    noise_state: jax.Array,       # counter: (2,) uint32; lfsr: (B, C) uint32
-    clamp_mask: jax.Array | None = None,     # (N,) bool
-    clamp_values: jax.Array | None = None,   # (B, N)
-    measured: jax.Array | None = None,       # (S,) moment weights, or None
-    *,
-    noise_mode: str = NOISE_COUNTER,
-    decimation: int = 8,
-    gather_perm: tuple | None = None,   # node -> flat LFSR column (length N)
-    accumulate: bool = False,
-    block_b: int = 128,
-    interpret: bool = True,
+def _launch(
+    m, dense_W, nbr_idx, nbr_w, h, gain, off, rand_gain, comp_off,
+    mask0, mask1, betas, noise_state, clamp_mask, clamp_values, measured,
+    visible_idx, *, sparse, noise_mode, decimation, gather_perm,
+    accumulate, collect_hist, n_visible, block_b, interpret,
 ):
-    """Run S resident sweeps.  Returns (m', noise_state'[, s_sum, c_sum]).
-
-    s_sum: (N,) sum of spins over (chains x measured sweeps); c_sum: (N, N)
-    accumulated Gram matrix sum_meas m^T m — extract edge correlations as
-    ``c_sum[e0, e1]``.  Both need dividing by (B * sum(measured)).
-    """
+    """Shared plumbing for the dense and sparse sweep-resident engines."""
     B, N = m.shape
     S = betas.shape[0]
     out_dtype = m.dtype
@@ -192,14 +231,29 @@ def sweep_fused_pallas(
     # needs the clamp inputs when values are re-imposed every sweep
     has_clamp = clamp_mask is not None and clamp_values is not None
     accumulate = accumulate and measured is not None
+    collect_hist = collect_hist and measured is not None
     if noise_mode not in (NOISE_COUNTER, NOISE_LFSR):
         raise ValueError(f"unknown noise_mode {noise_mode!r}")
+    if collect_hist:
+        if visible_idx is None:
+            raise ValueError("collect_hist needs visible_idx")
+        if not (0 < n_visible <= MAX_HIST_VISIBLE):
+            raise ValueError(
+                f"collect_hist supports 1..{MAX_HIST_VISIBLE} visible "
+                f"nodes, got {n_visible}")
+    if sparse:
+        D = nbr_idx.shape[0]
+    NB = 2 ** n_visible if collect_hist else 0
+
     if S == 0:  # empty schedule: identity, like a zero-length scan
-        noise_out = jnp.asarray(noise_state, jnp.uint32)
+        outs = [m, jnp.asarray(noise_state, jnp.uint32)]
         if accumulate:
-            return (m, noise_out, jnp.zeros((N,), jnp.float32),
-                    jnp.zeros((N, N), jnp.float32))
-        return m, noise_out
+            c_shape = (D, N) if sparse else (N, N)
+            outs += [jnp.zeros((N,), jnp.float32),
+                     jnp.zeros(c_shape, jnp.float32)]
+        if collect_hist:
+            outs.append(jnp.zeros((NB,), jnp.float32))
+        return tuple(outs)
 
     Np = _round_up(N, 128)
     tb = min(block_b, _round_up(B, 8))
@@ -207,7 +261,6 @@ def sweep_fused_pallas(
     n_b = Bp // tb
 
     mp = _pad_axis(_pad_axis(m, tb, 0), 128, 1)
-    Wp = _pad_axis(_pad_axis(W, 128, 0), 128, 1)
     row = lambda x, v=0.0: _pad_axis(
         jnp.asarray(x).reshape(1, -1).astype(jnp.float32), 128, 1, v)
     hp, gp, op_, rgp, cop = (row(x) for x in
@@ -219,14 +272,25 @@ def sweep_fused_pallas(
     betasp = _pad_axis(jnp.asarray(betas, jnp.float32), tb, 1)
 
     vec = lambda: pl.BlockSpec((1, Np), lambda i: (0, 0))
-    in_specs = [
-        pl.BlockSpec((tb, Np), lambda i: (i, 0)),      # m
-        pl.BlockSpec((Np, Np), lambda i: (0, 0)),      # W (VMEM-resident)
-        vec(), vec(), vec(), vec(), vec(),             # h, g, off, rg, co
-        vec(), vec(),                                  # color masks (int8)
-        pl.BlockSpec((S, tb), lambda i: (0, i)),       # betas
-    ]
-    args = [mp, Wp, hp, gp, op_, rgp, cop, m0p, m1p, betasp]
+    in_specs = [pl.BlockSpec((tb, Np), lambda i: (i, 0))]       # m
+    args = [mp]
+    if sparse:
+        Dp = _round_up(D, 8)
+        idxp = _pad_axis(_pad_axis(
+            jnp.asarray(nbr_idx, jnp.int32), Dp, 0), 128, 1)
+        wp = _pad_axis(_pad_axis(
+            jnp.asarray(nbr_w, jnp.float32), Dp, 0), 128, 1)
+        in_specs += [pl.BlockSpec((Dp, Np), lambda i: (0, 0)),  # nbr_idx
+                     pl.BlockSpec((Dp, Np), lambda i: (0, 0))]  # nbr_w
+        args += [idxp, wp]
+    else:
+        Wp = _pad_axis(_pad_axis(dense_W, 128, 0), 128, 1)
+        in_specs.append(pl.BlockSpec((Np, Np), lambda i: (0, 0)))  # W
+        args.append(Wp)
+    in_specs += [vec(), vec(), vec(), vec(), vec(),             # h,g,off,rg,co
+                 vec(), vec(),                                  # color masks
+                 pl.BlockSpec((S, tb), lambda i: (0, i))]       # betas
+    args += [hp, gp, op_, rgp, cop, m0p, m1p, betasp]
 
     if has_clamp:
         in_specs.append(vec())
@@ -236,9 +300,21 @@ def sweep_fused_pallas(
         in_specs.append(pl.BlockSpec((tb, Np), lambda i: (i, 0)))
         args.append(_pad_axis(_pad_axis(
             jnp.asarray(clamp_values, jnp.float32), tb, 0), 128, 1))
-    if accumulate:
+    if accumulate or collect_hist:
         in_specs.append(pl.BlockSpec((S, 1), lambda i: (0, 0)))
         args.append(jnp.asarray(measured, jnp.float32).reshape(S, 1))
+    NBp = 0
+    if collect_hist:
+        NVp = _round_up(n_visible, 128)
+        NBp = _round_up(NB, 128)
+        visp = _pad_axis(
+            jnp.asarray(visible_idx, jnp.int32).reshape(1, -1), 128, 1, 0)
+        powp = _pad_axis(jnp.asarray(
+            2 ** np.arange(n_visible, dtype=np.int32)).reshape(1, -1),
+            128, 1, 0)
+        in_specs += [pl.BlockSpec((1, NVp), lambda i: (0, 0)),
+                     pl.BlockSpec((1, NVp), lambda i: (0, 0))]
+        args += [visp, powp]
 
     if noise_mode == NOISE_COUNTER:
         in_specs.append(pl.BlockSpec((1, 2), lambda i: (0, 0)))
@@ -269,12 +345,16 @@ def sweep_fused_pallas(
     out_specs = [pl.BlockSpec((tb, Np), lambda i: (i, 0)), noise_out_spec]
     scratch = []
     if accumulate:
+        c_shape = (Dp, Np) if sparse else (Np, Np)
         out_shape += [jax.ShapeDtypeStruct((1, Np), jnp.float32),
-                      jax.ShapeDtypeStruct((Np, Np), jnp.float32)]
+                      jax.ShapeDtypeStruct(c_shape, jnp.float32)]
         out_specs += [pl.BlockSpec((1, Np), lambda i: (0, 0)),
-                      pl.BlockSpec((Np, Np), lambda i: (0, 0))]
-        scratch = [_VMEM((1, Np), jnp.float32),
-                   _VMEM((Np, Np), jnp.float32)]
+                      pl.BlockSpec(c_shape, lambda i: (0, 0))]
+        scratch += [_VMEM((1, Np), jnp.float32), _VMEM(c_shape, jnp.float32)]
+    if collect_hist:
+        out_shape.append(jax.ShapeDtypeStruct((1, NBp), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, NBp), lambda i: (0, 0)))
+        scratch.append(_VMEM((1, NBp), jnp.float32))
 
     kw = {}
     if not interpret and _COMPILER_PARAMS is not None:
@@ -284,7 +364,9 @@ def sweep_fused_pallas(
         functools.partial(
             _kernel, S=S, tb=tb, Np=Np, n_b=n_b, B=B,
             noise_mode=noise_mode, has_clamp=has_clamp,
-            accumulate=accumulate, decimation=decimation),
+            accumulate=accumulate, collect_hist=collect_hist,
+            decimation=decimation, sparse=sparse,
+            D=D if sparse else 0, NBp=NBp),
         grid=(n_b,),
         in_specs=in_specs,
         out_specs=tuple(out_specs),
@@ -294,11 +376,115 @@ def sweep_fused_pallas(
         **kw,
     )(*args)
 
-    m_out = outs[0][:B, :N]
+    result = [outs[0][:B, :N]]
     if noise_mode == NOISE_COUNTER:
-        noise_out = outs[1].reshape(2)
+        result.append(outs[1].reshape(2))
     else:
-        noise_out = outs[1][:B, :noise_state.shape[-1]]
+        result.append(outs[1][:B, :noise_state.shape[-1]])
+    k = 2
     if accumulate:
-        return m_out, noise_out, outs[2][0, :N], outs[3][:N, :N]
-    return m_out, noise_out
+        result.append(outs[k][0, :N])
+        result.append(outs[k + 1][:D, :N] if sparse else outs[k + 1][:N, :N])
+        k += 2
+    if collect_hist:
+        result.append(outs[k][0, :NB])
+    return tuple(result)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("noise_mode", "decimation", "gather_perm", "accumulate",
+                     "collect_hist", "n_visible", "block_b", "interpret"),
+)
+def sweep_fused_pallas(
+    m: jax.Array,                 # (B, N) spins in {-1, +1}
+    W: jax.Array,                 # (N, N) directional couplings
+    h: jax.Array,
+    gain: jax.Array,
+    off: jax.Array,
+    rand_gain: jax.Array,
+    comp_off: jax.Array,
+    mask0: jax.Array,             # (N,) bool — color-0 update set (minus clamps)
+    mask1: jax.Array,             # (N,) bool — color-1 update set (minus clamps)
+    betas: jax.Array,             # (S, B) per-sweep, per-chain inverse temps
+    noise_state: jax.Array,       # counter: (2,) uint32; lfsr: (B, C) uint32
+    clamp_mask: jax.Array | None = None,     # (N,) bool
+    clamp_values: jax.Array | None = None,   # (B, N)
+    measured: jax.Array | None = None,       # (S,) statistic weights, or None
+    visible_idx: jax.Array | None = None,    # (n_visible,) histogram nodes
+    *,
+    noise_mode: str = NOISE_COUNTER,
+    decimation: int = 8,
+    gather_perm: tuple | None = None,   # node -> flat LFSR column (length N)
+    accumulate: bool = False,
+    collect_hist: bool = False,
+    n_visible: int = 0,
+    block_b: int = 128,
+    interpret: bool = True,
+):
+    """Run S resident sweeps, dense layout.
+
+    Returns ``(m', noise_state'[, s_sum, c_sum][, hist])``.
+    s_sum: (N,) sum of spins over (chains x measured sweeps); c_sum: (N, N)
+    accumulated Gram matrix sum_meas m^T m — extract edge correlations as
+    ``c_sum[e0, e1]``.  hist: (2^n_visible,) weighted counts of visible bit
+    patterns (energy.empirical_visible_dist code order).  All need dividing
+    by their sample counts.
+    """
+    return _launch(
+        m, W, None, None, h, gain, off, rand_gain, comp_off, mask0, mask1,
+        betas, noise_state, clamp_mask, clamp_values, measured, visible_idx,
+        sparse=False, noise_mode=noise_mode, decimation=decimation,
+        gather_perm=gather_perm, accumulate=accumulate,
+        collect_hist=collect_hist, n_visible=n_visible, block_b=block_b,
+        interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("noise_mode", "decimation", "gather_perm", "accumulate",
+                     "collect_hist", "n_visible", "block_b", "interpret"),
+)
+def sweep_sparse_pallas(
+    m: jax.Array,                 # (B, N) spins in {-1, +1}
+    nbr_idx: jax.Array,           # (D, N) int32 neighbor table
+    nbr_w: jax.Array,             # (D, N) per-slot couplings
+    h: jax.Array,
+    gain: jax.Array,
+    off: jax.Array,
+    rand_gain: jax.Array,
+    comp_off: jax.Array,
+    mask0: jax.Array,
+    mask1: jax.Array,
+    betas: jax.Array,             # (S, B)
+    noise_state: jax.Array,
+    clamp_mask: jax.Array | None = None,
+    clamp_values: jax.Array | None = None,
+    measured: jax.Array | None = None,
+    visible_idx: jax.Array | None = None,
+    *,
+    noise_mode: str = NOISE_COUNTER,
+    decimation: int = 8,
+    gather_perm: tuple | None = None,
+    accumulate: bool = False,
+    collect_hist: bool = False,
+    n_visible: int = 0,
+    block_b: int = 128,
+    interpret: bool = True,
+):
+    """Run S resident sweeps on the Chimera-native fixed-degree layout.
+
+    Same contract as `sweep_fused_pallas` except weights are the (D, N)
+    slot layout and the second-moment output is the per-slot edge
+    correlation ``c_slots[d, i] = Σ m_i · m_{nbr_idx[d, i]}`` instead of a
+    Gram matrix — read edge (i, j) at ``c_slots[slot_of(i→j), i]`` (see
+    ChimeraGraph.edge_slots).  Never materializes anything O(N²).
+    """
+    return _launch(
+        m, None, nbr_idx, nbr_w, h, gain, off, rand_gain, comp_off,
+        mask0, mask1, betas, noise_state, clamp_mask, clamp_values,
+        measured, visible_idx,
+        sparse=True, noise_mode=noise_mode, decimation=decimation,
+        gather_perm=gather_perm, accumulate=accumulate,
+        collect_hist=collect_hist, n_visible=n_visible, block_b=block_b,
+        interpret=interpret)
