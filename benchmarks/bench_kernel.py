@@ -129,6 +129,58 @@ def _add_tpu_projection(B: int, N: int, out: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
+# api.Session dispatch: compile-once vs the legacy per-call path
+# ---------------------------------------------------------------------------
+def bench_session_dispatch(N: int = 440, B: int = 64, S: int = 8,
+                           iters: int = 5) -> dict:
+    """Measure what the unified API buys at the dispatch layer.
+
+    The legacy path calls `pbit.gibbs_sample` as a plain Python function:
+    every call re-resolves the backend (env read), rebuilds the sweep
+    closure, and re-traces the scan before XLA's executable cache kicks
+    in.  An `api.Session` jits the closure once at compile; steady-state
+    calls replay the cached executable.  Both run the identical engine
+    ("ref" backend, counter noise), so the delta is pure
+    dispatch/trace overhead — the tax the CD loop, the tempering swap
+    loop, and the serving path used to pay per call.
+    """
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.core import pbit
+    from repro.core.cd import PBitMachine
+    from repro.core.hardware import HardwareConfig
+
+    g = _chimera_for(N)
+    machine = PBitMachine.create(g, jax.random.PRNGKey(0),
+                                 HardwareConfig(), noise="counter",
+                                 backend="ref", w_scale=0.05)
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-40, 40, g.n_edges), jnp.int32)
+    h = jnp.zeros((g.n_nodes,), jnp.int32)
+    session = machine.session(
+        schedule=api.Constant(beta=0.7, n_sweeps=S), chains=B)
+    chip = session.program_edges(codes, h)
+    m0 = session.random_spins(jax.random.PRNGKey(1))
+    ns = session.noise_state(jax.random.PRNGKey(2))
+    state, step = machine.noise_fn(jax.random.PRNGKey(2), B)
+    betas = jnp.full((S,), 0.7, jnp.float32)
+    color = jnp.asarray(g.color)
+
+    t_legacy = timer(
+        lambda: pbit.gibbs_sample(chip, color, m0, betas, state, step,
+                                  backend="ref")[0], iters=iters)
+    t_session = timer(lambda: session.sample(chip, m0, ns)[0], iters=iters)
+    return {
+        "N": N, "B": B, "S": S, "backend": "ref",
+        "legacy_us_per_call": t_legacy * 1e6,
+        "session_us_per_call": t_session * 1e6,
+        "dispatch_overhead_us": (t_legacy - t_session) * 1e6,
+        "speedup_per_call": t_legacy / t_session,
+    }
+
+
+# ---------------------------------------------------------------------------
 # dense vs Chimera-native block-sparse
 # ---------------------------------------------------------------------------
 def dense_vs_sparse_model(B: int, N: int, S: int,
@@ -234,7 +286,15 @@ def run(quick: bool = False) -> dict:
         bench_sparse_config(8192, 8, 2, iters=1, measure=not quick),
     ]
 
+    # compile-once Session dispatch vs legacy per-call re-trace at N=440
+    results["session_dispatch"] = bench_session_dispatch(
+        440, 16 if quick else 64, 8, iters=3 if quick else 5)
+
     chip = results["configs"][0]
+    emit("kernel_session_dispatch_N440",
+         results["session_dispatch"]["session_us_per_call"],
+         f"legacy={results['session_dispatch']['legacy_us_per_call']:.0f}us"
+         f" ({results['session_dispatch']['speedup_per_call']:.1f}x)")
     emit("kernel_fused_s16_cpu", chip["cpu_fused_s16_us_per_launch"],
          f"sweeps/s={chip['cpu_fused_s16_sweeps_per_sec']:.1f}")
     emit("kernel_traffic_reduction_B256_N2048",

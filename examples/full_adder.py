@@ -8,42 +8,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HardwareConfig, PBitMachine, CDConfig, train_cd
-from repro.core import pbit, tasks
-from repro.core.cd import quantize_codes
+from repro import api
+from repro.core import HardwareConfig, PBitMachine, CDConfig
+from repro.core import tasks
 from repro.core.chimera import make_chimera
 
 graph = make_chimera(1, 2)   # two coupled cells: 5 visibles + 8 hiddens
-machine = PBitMachine.create(graph, jax.random.PRNGKey(9),
+machine = PBitMachine.create(graph, jax.random.PRNGKey(0),
                              HardwareConfig(), beta=1.0, w_scale=0.05)
 task = tasks.full_adder_task(graph)
 
 cfg = CDConfig(lr=6.0, cd_k=15, pos_sweeps=15, chains=256, epochs=120)
-res = train_cd(machine, task.visible_idx, task.target_dist, cfg,
-               jax.random.PRNGKey(1), eval_every=30, verbose=True)
+res = task.train(machine, cfg, jax.random.PRNGKey(1), eval_every=30,
+                 verbose=True)
 
-# inference: clamp inputs, sample outputs
-chip = machine.program(quantize_codes(jnp.asarray(res.Jm)),
-                       quantize_codes(jnp.asarray(res.hm)))
+# inference: clamp inputs, sample outputs.  One compiled Session serves
+# all 8 input rows — only the clamp values change per call.
+session = machine.session(
+    schedule=api.Constant(beta=2.0, n_sweeps=120), chains=128)
+chip = session.program_master(jnp.asarray(res.Jm), jnp.asarray(res.hm))
 vis = task.visible_idx
+clamp_mask = jnp.zeros((graph.n_nodes,), bool).at[vis[:3]].set(True)
 print("\nclamped inference (mode of sampled S, Cout):")
 correct = 0
 for a in (0, 1):
     for b in (0, 1):
         for cin in (0, 1):
-            clamp_mask = jnp.zeros((graph.n_nodes,), bool
-                                   ).at[vis[:3]].set(True)
             cv = jnp.zeros((128, graph.n_nodes))
             cv = cv.at[:, vis[0]].set(2 * a - 1)
             cv = cv.at[:, vis[1]].set(2 * b - 1)
             cv = cv.at[:, vis[2]].set(2 * cin - 1)
-            m0 = pbit.random_spins(jax.random.PRNGKey(0), 128,
-                                   graph.n_nodes)
-            ns, nf = machine.noise_fn(jax.random.PRNGKey(2), 128)
-            betas = jnp.full((120,), 2.0)
-            m, _, traj = pbit.gibbs_sample(
-                chip, jnp.asarray(graph.color), m0, betas, ns, nf,
-                clamp_mask=clamp_mask, clamp_values=cv, collect=True)
+            m0 = session.random_spins(jax.random.PRNGKey(0))
+            ns = session.noise_state(jax.random.PRNGKey(2))
+            m, _, traj = session.sample(
+                chip, m0, ns, clamp_mask=clamp_mask, clamp_values=cv,
+                collect=True)
             samples = np.asarray(traj[40:])
             s = int(samples[..., vis[3]].mean() > 0)
             cout = int(samples[..., vis[4]].mean() > 0)

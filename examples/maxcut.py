@@ -1,7 +1,14 @@
 """Paper Fig 9: optimization on the chip — SK annealing + Max-Cut.
 
+Both workloads run through one compiled `api.Session` per anneal
+schedule (`machine.session(schedule=api.Anneal(...))`); `anneal` and
+`solve_maxcut` construct no samplers of their own — see docs/api.md.
+
 Run:  PYTHONPATH=src python examples/maxcut.py
+(REPRO_EXAMPLE_QUICK=1 shrinks the run for the CI smoke job.)
 """
+import os
+
 import jax
 import numpy as np
 
@@ -19,24 +26,30 @@ from repro.core.chimera import make_chip_graph
 graph = make_chip_graph()
 machine = PBitMachine.create(graph, jax.random.PRNGKey(0),
                              HardwareConfig(), beta=1.0, w_scale=0.03)
+quick = bool(os.environ.get("REPRO_EXAMPLE_QUICK"))
+sweeps = 150 if quick else 600
+chains = 16 if quick else 64
 
 # --- Fig 9a: SK spin glass annealing -----------------------------------
 J, h = sk_instance(graph, jax.random.PRNGKey(4))
 out = anneal(machine, J, h,
-             AnnealConfig(n_sweeps=600, beta_start=0.02, beta_end=3.0,
-                          chains=64),
-             jax.random.PRNGKey(5), record_every=60)
-print("SK annealing energy trajectory (mean over 64 chains):")
+             AnnealConfig(n_sweeps=sweeps, beta_start=0.02, beta_end=3.0,
+                          chains=chains),
+             jax.random.PRNGKey(5), record_every=sweeps // 10)
+print(f"SK annealing energy trajectory (mean over {chains} chains):")
 for s, e in zip(out["sweeps"], out["energy_mean"]):
     print(f"  sweep {s:4d}: E = {e:9.1f}")
 print(f"best energy found: {out['best_energy']:.1f}")
 
 # --- Fig 9b: Max-Cut -----------------------------------------------------
 prob = random_chimera_maxcut(graph, jax.random.PRNGKey(1), edge_prob=0.8)
-sol = solve_maxcut(machine, prob,
-                   AnnealConfig(n_sweeps=600, beta_start=0.05,
-                                beta_end=3.0, chains=64),
-                   jax.random.PRNGKey(2))
+cut_cfg = AnnealConfig(n_sweeps=sweeps, beta_start=0.05, beta_end=3.0,
+                       chains=chains)
+# explicit Session: compile the anneal schedule once, hand it to the solver
+session = machine.session(schedule=cut_cfg.to_schedule(),
+                          chains=cut_cfg.chains)
+sol = solve_maxcut(machine, prob, cut_cfg, jax.random.PRNGKey(2),
+                   session=session)
 rng = np.random.default_rng(0)
 rand = max(prob.cut_value(rng.choice([-1.0, 1.0], size=graph.n_nodes))
            for _ in range(64))

@@ -6,19 +6,22 @@ train with in-situ contrastive divergence, and inspect the learned visible
 distribution.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+(REPRO_EXAMPLE_QUICK=1 shrinks the run for the CI smoke job.)
 """
-import jax
-import numpy as np
+import os
 
-from repro.core import HardwareConfig, PBitMachine, CDConfig, train_cd
+import jax
+
+from repro.core import HardwareConfig, PBitMachine, CDConfig
 from repro.core.chimera import make_chimera
-from repro.core.cd import sample_visible_dist
 from repro.core import tasks
 
 # one Chimera unit cell = a 4:4 RBM, exactly like the chip's
 graph = make_chimera(1, 1)
 
-# a chip *instance*: mismatch sampled from the process-variation model
+# a chip *instance*: mismatch sampled from the process-variation model.
+# All sampling below goes through one compiled api.Session under the hood
+# (machine.session(...) — see docs/api.md).
 machine = PBitMachine.create(
     graph, jax.random.PRNGKey(42), HardwareConfig(), beta=1.0,
     w_scale=0.05)
@@ -28,12 +31,14 @@ task = tasks.and_gate_task(graph)
 print(f"chip: {graph.n_nodes} p-bits, task '{task.name}', "
       f"{task.n_visible} visible spins")
 
-cfg = CDConfig(lr=6.0, cd_k=15, pos_sweeps=15, chains=256, epochs=80)
-result = train_cd(machine, task.visible_idx, task.target_dist, cfg,
-                  jax.random.PRNGKey(7), eval_every=20, verbose=True)
+quick = bool(os.environ.get("REPRO_EXAMPLE_QUICK"))
+cfg = CDConfig(lr=6.0, cd_k=15, pos_sweeps=15, chains=256,
+               epochs=12 if quick else 80)
+result = task.train(machine, cfg, jax.random.PRNGKey(7),
+                    eval_every=4 if quick else 20, verbose=True)
 
-dist = sample_visible_dist(machine, result.Jm, result.hm,
-                           task.visible_idx, jax.random.PRNGKey(3))
+dist = task.sample_dist(machine, result.Jm, result.hm,
+                        jax.random.PRNGKey(3))
 print("\nlearned visible distribution (A, B, A∧B):")
 for code in range(8):
     bits = [(code >> i) & 1 for i in range(3)]

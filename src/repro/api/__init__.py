@@ -1,0 +1,48 @@
+"""Unified solver API: declarative `SamplerSpec` -> compiled `Session`.
+
+The single entry point every workload uses to construct samplers:
+
+    spec = api.SamplerSpec(graph=g, hw=hw, mismatch=mism,
+                           noise="counter", backend="auto",
+                           schedule=api.Anneal(0.05, 3.0, n_sweeps=600),
+                           chains=64)
+    session = api.Session(spec)       # env + backend resolved HERE, once
+    chip = session.program(J_codes, h_codes)
+    state = session.init_state(key)
+    m, ns, _ = session.sample(chip, state.m, state.noise_state)
+
+See docs/api.md for the lifecycle and the old-call -> new-call migration
+table; `core.cd.PBitMachine.session(...)` builds specs/sessions from the
+familiar machine object.
+"""
+from repro.api.spec import (
+    BACKENDS,
+    FUSED_BACKENDS,
+    IN_KERNEL_NOISE,
+    NOISE_KINDS,
+    SPARSE_BACKENDS,
+    Anneal,
+    Constant,
+    SamplerSpec,
+    Schedule,
+    Tempered,
+    dense_vmem_feasible,
+    resolve_backend,
+    resolve_interpret,
+)
+from repro.api.session import (
+    Session,
+    SessionState,
+    program,
+    program_edges,
+    program_master,
+)
+
+__all__ = [
+    "BACKENDS", "FUSED_BACKENDS", "IN_KERNEL_NOISE", "NOISE_KINDS",
+    "SPARSE_BACKENDS",
+    "Schedule", "Constant", "Anneal", "Tempered",
+    "SamplerSpec", "Session", "SessionState",
+    "program", "program_edges", "program_master",
+    "dense_vmem_feasible", "resolve_backend", "resolve_interpret",
+]

@@ -1,0 +1,389 @@
+"""Compiled solver sessions: `SamplerSpec` -> jitted closures.
+
+`Session(spec)` is the one choke point between every workload (CD
+learning, annealing, Max-Cut, parallel tempering, clamped inference) and
+the execution backends in core/pbit.py + kernels/.  Construction does all
+the one-time work:
+
+  * validates the spec and resolves ``backend`` / ``interpret`` (the only
+    place REPRO_PBIT_BACKEND / REPRO_PALLAS_INTERPRET are read — call
+    time never touches the environment);
+  * builds the noise step function once (philox / counter / lfsr,
+    including the LFSR's per-node gather permutation);
+  * caches the graph's color masks, edge list, and Chimera slot tables;
+  * materializes the spec's `Schedule` into the default beta array.
+
+Sampling entry points return jitted closures cached per static signature
+(clamped / collect / sweep counts), so repeated calls — the CD training
+loop, tempering swap rounds, evaluation — pay zero re-trace or dispatch
+overhead (benchmarks/bench_kernel.py `session_dispatch` measures this
+against the legacy per-call path).
+
+State threading is explicit everywhere: chips, spins, and noise state are
+arguments and return values, never hidden attributes — a Session is
+immutable after construction and safe to share across workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import (
+    SamplerSpec,
+    resolve_backend,
+    resolve_interpret,
+)
+from repro.core import pbit
+from repro.core.hardware import (
+    EffectiveChip,
+    program_weights,
+    program_weights_sparse,
+    quantize_codes,
+)
+
+
+class SessionState(NamedTuple):
+    """Spins + noise state, the carry every closure threads explicitly."""
+
+    m: jax.Array
+    noise_state: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# chip programming (spec-level: needs no backend/noise resolution, so it
+# works on specs a Session would reject — programming only depends on the
+# graph, the mismatch instance, and the analog model)
+# ---------------------------------------------------------------------------
+def _graph_tables(spec: SamplerSpec, tables=None):
+    if tables is not None:
+        return tables
+    nbr_idx, nbr_mask = spec.graph.neighbor_table()
+    slot_ij, slot_ji = spec.graph.edge_slots(nbr_idx)
+    return nbr_idx, nbr_mask, slot_ij, slot_ji
+
+
+def _scale_chip(spec: SamplerSpec, chip: EffectiveChip) -> EffectiveChip:
+    # external-resistor scale: DAC LSB units -> neuron-input units
+    upd = {"h": chip.h * spec.w_scale}
+    if chip.W is not None:
+        upd["W"] = chip.W * spec.w_scale
+    if chip.nbr_w is not None:
+        upd["nbr_w"] = chip.nbr_w * spec.w_scale
+    return dataclasses.replace(chip, **upd)
+
+
+def program(spec: SamplerSpec, J_codes: jax.Array, h_codes: jax.Array,
+            enable: jax.Array | None = None, *, tables=None
+            ) -> EffectiveChip:
+    """Program dense (n, n) symmetric 8-bit codes through the spec's
+    analog model (sparse-native specs gather the codes into slots)."""
+    nbr_idx, nbr_mask, _, _ = _graph_tables(spec, tables)
+    if enable is None:
+        enable = jnp.abs(jnp.asarray(J_codes)) > 0
+    if spec.sparse_native:
+        rows = jnp.arange(spec.graph.n_nodes)[None, :]
+        idx = jnp.asarray(nbr_idx)
+        chip = program_weights_sparse(
+            jnp.asarray(J_codes)[rows, idx], h_codes,
+            jnp.asarray(enable)[rows, idx], spec.mismatch, spec.hw,
+            idx, jnp.asarray(nbr_mask))
+    else:
+        adj = jnp.asarray(spec.graph.adjacency())
+        neighbors = jnp.asarray(nbr_idx) if spec.attach_sparse else None
+        chip = program_weights(J_codes, h_codes, enable, spec.mismatch,
+                               spec.hw, adjacency=adj, neighbors=neighbors)
+    return _scale_chip(spec, chip)
+
+
+def program_edges(spec: SamplerSpec, J_edge_codes: jax.Array,
+                  h_codes: jax.Array, *, tables=None) -> EffectiveChip:
+    """Program per-edge codes (E,) — the CD master-weight layout."""
+    nbr_idx, nbr_mask, slot_ij, slot_ji = _graph_tables(spec, tables)
+    e = spec.graph.edges
+    codes = jnp.asarray(J_edge_codes)
+    if spec.sparse_native:
+        D = nbr_idx.shape[0]
+        n = spec.graph.n_nodes
+        J_slots = (jnp.zeros((D, n), codes.dtype)
+                   .at[slot_ij, e[:, 0]].set(codes)
+                   .at[slot_ji, e[:, 1]].set(codes))
+        chip = program_weights_sparse(
+            J_slots, h_codes, jnp.abs(J_slots) > 0, spec.mismatch,
+            spec.hw, jnp.asarray(nbr_idx), jnp.asarray(nbr_mask))
+        return _scale_chip(spec, chip)
+    n = spec.graph.n_nodes
+    J = (jnp.zeros((n, n), codes.dtype)
+         .at[e[:, 0], e[:, 1]].set(codes)
+         .at[e[:, 1], e[:, 0]].set(codes))
+    return program(spec, J, h_codes, tables=(nbr_idx, nbr_mask, slot_ij,
+                                             slot_ji))
+
+
+def program_master(spec: SamplerSpec, Jm: jax.Array, hm: jax.Array,
+                   *, tables=None) -> EffectiveChip:
+    """Quantize float masters — edge-list (E,) or dense (n, n) — and
+    program."""
+    Jm = jnp.asarray(Jm)
+    if Jm.ndim == 1:
+        return program_edges(spec, quantize_codes(Jm), quantize_codes(hm),
+                             tables=tables)
+    return program(spec, quantize_codes(Jm), quantize_codes(hm),
+                   tables=tables)
+
+
+class Session:
+    """A compiled solver: spec-resolved programming + sampling closures."""
+
+    def __init__(self, spec: SamplerSpec):
+        self.spec = spec.validate()
+        self.backend = resolve_backend(spec)
+        self.interpret = resolve_interpret(spec)
+        g = spec.graph
+        self.graph = g
+        self._color = jnp.asarray(g.color)
+        self._edges = jnp.asarray(g.edges)
+        nbr_idx, nbr_mask = g.neighbor_table()
+        slot_ij, slot_ji = g.edge_slots(nbr_idx)
+        self._nbr = (nbr_idx, nbr_mask, slot_ij, slot_ji)
+        self._noise_init, self._noise_step = self._make_noise()
+        self.default_betas = (
+            None if spec.schedule is None
+            else spec.schedule.betas(spec.chains))
+        self._fns: dict = {}
+
+    # ------------------------------------------------------------------
+    # construction helpers
+    # ------------------------------------------------------------------
+    def _make_noise(self) -> tuple[Callable, pbit.NoiseFn]:
+        spec = self.spec
+        if spec.noise == "lfsr":
+            return pbit.make_lfsr_noise(spec.graph, spec.chains,
+                                        spec.decimation)
+        if spec.noise == "counter":
+            return pbit.make_counter_noise(spec.chains, spec.graph.n_nodes)
+        step = pbit.make_philox_noise(spec.chains, spec.graph.n_nodes)
+        return (lambda key: key), step
+
+    def _fn(self, key, builder, *args):
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = builder(*args)
+            self._fns[key] = fn
+        return fn
+
+    def _betas(self, betas) -> jax.Array:
+        if betas is None:
+            if self.default_betas is None:
+                raise ValueError(
+                    "this Session's spec has no schedule; pass betas "
+                    "explicitly or build the spec with schedule=")
+            return self.default_betas
+        return jnp.asarray(betas, jnp.float32)
+
+    # ------------------------------------------------------------------
+    # state initialization (explicit key threading)
+    # ------------------------------------------------------------------
+    def random_spins(self, key: jax.Array) -> jax.Array:
+        return pbit.random_spins(key, self.spec.chains, self.graph.n_nodes)
+
+    def noise_state(self, key: jax.Array) -> jax.Array:
+        return self._noise_init(key)
+
+    def init_state(self, key: jax.Array) -> SessionState:
+        k1, k2 = jax.random.split(key)
+        return SessionState(self.random_spins(k1), self.noise_state(k2))
+
+    # ------------------------------------------------------------------
+    # chip programming (dense or sparse-native, per the spec's mismatch)
+    # ------------------------------------------------------------------
+    def program(self, J_codes: jax.Array, h_codes: jax.Array,
+                enable: jax.Array | None = None) -> EffectiveChip:
+        """Program dense (n, n) symmetric 8-bit codes."""
+        return program(self.spec, J_codes, h_codes, enable,
+                       tables=self._nbr)
+
+    def program_edges(self, J_edge_codes: jax.Array, h_codes: jax.Array
+                      ) -> EffectiveChip:
+        """Program per-edge codes (E,) — the CD master-weight layout."""
+        return program_edges(self.spec, J_edge_codes, h_codes,
+                             tables=self._nbr)
+
+    def program_master(self, Jm: jax.Array, hm: jax.Array) -> EffectiveChip:
+        """Quantize float masters — edge-list (E,) or dense (n, n) — and
+        program."""
+        return program_master(self.spec, Jm, hm, tables=self._nbr)
+
+    # ------------------------------------------------------------------
+    # sampling closures
+    # ------------------------------------------------------------------
+    def sample(
+        self,
+        chip: EffectiveChip,
+        m: jax.Array,
+        noise_state: jax.Array,
+        betas: jax.Array | None = None,
+        *,
+        clamp_mask: jax.Array | None = None,
+        clamp_values: jax.Array | None = None,
+        collect: bool = False,
+    ) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+        """Run the schedule (or explicit ``betas``): (m', state', traj|None).
+
+        ``collect=True`` returns the (S, B, N) per-sweep trajectory and
+        forces the scan path (the fused engines cannot emit it).
+        """
+        betas = self._betas(betas)
+        clamped = clamp_mask is not None
+        fn = self._fn(("sample", collect, clamped),
+                      self._build_sample, collect, clamped)
+        if clamped:
+            return fn(chip, m, noise_state, betas, clamp_mask, clamp_values)
+        return fn(chip, m, noise_state, betas)
+
+    def _build_sample(self, collect: bool, clamped: bool):
+        def impl(chip, m, ns, betas, cm=None, cv=None):
+            return pbit.gibbs_sample(
+                chip, self._color, m, betas, ns, self._noise_step,
+                clamp_mask=cm, clamp_values=cv, collect=collect,
+                backend=self.backend, interpret=self.interpret)
+
+        if clamped:
+            return jax.jit(impl)
+        return jax.jit(lambda chip, m, ns, betas: impl(chip, m, ns, betas))
+
+    def stats(
+        self,
+        chip: EffectiveChip,
+        m: jax.Array,
+        noise_state: jax.Array,
+        n_sweeps: int,
+        burn_in: int,
+        *,
+        clamp_mask: jax.Array | None = None,
+        clamp_values: jax.Array | None = None,
+        beta: float | None = None,
+    ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+        """On-line first/second moments at the spec's base beta:
+        (mean_spin[N], mean_edge_corr[E], m', noise_state')."""
+        beta = self.spec.beta if beta is None else float(beta)
+        clamped = clamp_mask is not None
+        fn = self._fn(("stats", n_sweeps, burn_in, beta, clamped),
+                      self._build_stats, n_sweeps, burn_in, beta, clamped)
+        if clamped:
+            return fn(chip, m, noise_state, clamp_mask, clamp_values)
+        return fn(chip, m, noise_state)
+
+    def _build_stats(self, n_sweeps, burn_in, beta, clamped):
+        def impl(chip, m, ns, cm=None, cv=None):
+            return pbit.gibbs_stats(
+                chip, self._color, m, beta, n_sweeps, burn_in, ns,
+                self._noise_step, self._edges, clamp_mask=cm,
+                clamp_values=cv, backend=self.backend,
+                interpret=self.interpret)
+
+        if clamped:
+            return jax.jit(impl)
+        return jax.jit(lambda chip, m, ns: impl(chip, m, ns))
+
+    def visible_hist(
+        self,
+        chip: EffectiveChip,
+        m: jax.Array,
+        noise_state: jax.Array,
+        visible_idx: np.ndarray,
+        burn_in: int,
+        betas: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Streaming visible-pattern histogram: (counts[2^nv], m', state')."""
+        betas = self._betas(betas)
+        vis_key = tuple(int(i) for i in np.asarray(visible_idx))
+        fn = self._fn(("hist", vis_key, burn_in),
+                      self._build_hist, np.asarray(visible_idx), burn_in)
+        return fn(chip, m, noise_state, betas)
+
+    def _build_hist(self, visible_idx, burn_in):
+        def impl(chip, m, ns, betas):
+            return pbit.gibbs_visible_hist(
+                chip, self._color, m, betas, burn_in, ns, self._noise_step,
+                visible_idx, backend=self.backend,
+                interpret=self.interpret)
+
+        return jax.jit(impl)
+
+    # ------------------------------------------------------------------
+    # contrastive divergence (the in-situ learning closure)
+    # ------------------------------------------------------------------
+    def make_cd_step(self, cfg, visible_idx: np.ndarray):
+        """Build the jitted one-epoch CD update (paper Fig. 7a).
+
+        ``cfg`` is a core.cd.CDConfig (duck-typed).  Returns
+        step(Jm, hm, data_vis, m, noise_state, vel) ->
+        (Jm, hm, m, noise_state, vel, metrics) with (E,) edge-list master
+        couplings; both Gibbs phases and the weight update run inside one
+        jit through this session's backend.
+        """
+        if cfg.chains != self.spec.chains:
+            raise ValueError(
+                f"CDConfig.chains={cfg.chains} but this Session was "
+                f"compiled for chains={self.spec.chains}; build the "
+                f"session with chains=cfg.chains")
+        key = ("cd_step", cfg.lr, cfg.cd_k, cfg.pos_sweeps, cfg.burn_in,
+               cfg.h_lr_scale, cfg.weight_decay, cfg.persistent,
+               cfg.momentum,
+               tuple(int(i) for i in np.asarray(visible_idx)))
+        return self._fn(key, self._build_cd_step, cfg,
+                        np.asarray(visible_idx))
+
+    def _build_cd_step(self, cfg, visible_idx):
+        from repro.core.hardware import WMAX, WMIN
+
+        n = self.graph.n_nodes
+        vis = jnp.asarray(visible_idx)
+        clamp_mask = jnp.zeros((n,), bool).at[vis].set(True)
+        beta = self.spec.beta
+
+        def phase(chip, m0, n_sweeps, ns, cm=None, cv=None):
+            return pbit.gibbs_stats(
+                chip, self._color, m0, beta, n_sweeps, cfg.burn_in, ns,
+                self._noise_step, self._edges, clamp_mask=cm,
+                clamp_values=cv, backend=self.backend,
+                interpret=self.interpret)
+
+        @jax.jit
+        def step(Jm, hm, data_vis, m, noise_state, vel):
+            chip = self.program_edges(quantize_codes(Jm),
+                                      quantize_codes(hm))
+            clamp_values = jnp.zeros((cfg.chains, n), jnp.float32)
+            clamp_values = clamp_values.at[:, vis].set(data_vis)
+
+            # positive phase: visibles pinned to data
+            pos_s, pos_c, m_pos, noise_state = phase(
+                chip, m, cfg.pos_sweeps, noise_state, clamp_mask,
+                clamp_values)
+            # negative phase: CD-k from the positive-phase state, or from
+            # the persistent chains (PCD)
+            neg_init = m if cfg.persistent else m_pos
+            neg_s, neg_c, m_neg, noise_state = phase(
+                chip, neg_init, cfg.cd_k, noise_state)
+
+            gJ = pos_c - neg_c
+            gh = pos_s - neg_s
+            vel_J, vel_h = vel
+            vel_J = cfg.momentum * vel_J + gJ
+            vel_h = cfg.momentum * vel_h + gh
+            Jm = (1.0 - cfg.weight_decay) * Jm + cfg.lr * vel_J
+            hm = (1.0 - cfg.weight_decay) * hm \
+                + cfg.lr * cfg.h_lr_scale * vel_h
+            Jm = jnp.clip(Jm, WMIN, WMAX)
+            hm = jnp.clip(hm, WMIN, WMAX)
+            metrics = {
+                "corr_err": jnp.abs(pos_c - neg_c).mean(),
+                "mean_err": jnp.abs(pos_s - neg_s).mean(),
+            }
+            return Jm, hm, m_neg, noise_state, (vel_J, vel_h), metrics
+
+        return step

@@ -1,0 +1,275 @@
+"""Declarative sampler specification: one frozen object describes a solver.
+
+The chip serves every workload — Boltzmann-machine learning, SK annealing,
+Max-Cut, parallel tempering — through one program/sample interface.  This
+module is the software contract for that interface: a `SamplerSpec` names
+*what* to sample (graph + chip programming model), *how* (noise source,
+execution backend, beta `Schedule`), and `api.Session` compiles it once
+into jitted closures (see session.py).
+
+Everything that used to be re-threaded by hand through five entry points
+(`backend=`, `noise=`, hand-built beta arrays, env-var lookups at call
+time) is a spec field, resolved exactly once at `Session` construction:
+
+  * ``backend`` — ``ref | pallas | fused | sparse | fused_sparse | auto``.
+    ``auto`` consults ``REPRO_PBIT_BACKEND`` (the env var becomes a spec
+    *default*, read at compile, never at call time) and otherwise picks
+    per the docs/kernels.md VMEM model: ``fused_sparse`` when the spec
+    carries the Chimera slot layout and the noise can be generated
+    in-kernel, ``sparse`` when it carries the layout but noise is
+    host-side, ``fused`` for a dense-only spec whose W is VMEM-resident,
+    else ``ref``.  This is the single seam where the ROADMAP
+    mesh-sharding follow-on will plug in (partition decisions live here).
+  * ``noise`` — ``philox | counter | lfsr`` (see core/pbit.py).
+  * ``schedule`` — a first-class `Schedule`: `Constant`, `Anneal`
+    (geometric/linear), or `Tempered` (per-chain ladder -> (S, B) betas).
+  * ``interpret`` — Pallas interpret mode; ``None`` resolves
+    ``REPRO_PALLAS_INTERPRET`` at compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chimera import ChimeraGraph
+from repro.core.hardware import HardwareConfig, Mismatch, SparseMismatch
+
+BACKENDS = ("ref", "pallas", "fused", "sparse", "fused_sparse")
+FUSED_BACKENDS = ("fused", "fused_sparse")
+SPARSE_BACKENDS = ("sparse", "fused_sparse")
+NOISE_KINDS = ("philox", "counter", "lfsr")
+IN_KERNEL_NOISE = ("counter", "lfsr")
+
+# docs/kernels.md VMEM model: the resident engine needs the weights plus
+# two (block_b, N) activation tiles simultaneously live in a 16 MB core.
+VMEM_BYTES = 16 * 2 ** 20
+_RESIDENT_BLOCK_B = 128
+
+
+def dense_vmem_feasible(n_nodes: int) -> bool:
+    """Can a dense (N, N) float32 W stay VMEM-resident (kernels.md model)?"""
+    return 4 * n_nodes * n_nodes + 2 * (_RESIDENT_BLOCK_B * n_nodes * 4) \
+        <= VMEM_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Base class: a declarative inverse-temperature schedule.
+
+    ``betas(chains)`` materializes the (S,) shared — or (S, B) per-chain —
+    float32 array the sampling engine scans over.  Schedules are frozen,
+    hashable value objects so they can key compiled-closure caches.
+    ``n_sweeps`` is keyword-only so subclasses keep natural positional
+    order: ``Anneal(0.05, 3.0, n_sweeps=600)``.
+    """
+
+    n_sweeps: int = dataclasses.field(default=1, kw_only=True)
+
+    def betas(self, chains: int | None = None) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Constant(Schedule):
+    """Fixed beta for every sweep — the Boltzmann-sampling workloads."""
+
+    beta: float = 1.0
+
+    def betas(self, chains: int | None = None) -> jax.Array:
+        return jnp.full((self.n_sweeps,), self.beta, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Anneal(Schedule):
+    """Simulated-annealing ramp (the chip's V_temp sweep, paper Fig. 9a)."""
+
+    beta_start: float = 0.05
+    beta_end: float = 3.0
+    kind: str = "geometric"  # or "linear"
+
+    def __post_init__(self):
+        if self.kind not in ("geometric", "linear"):
+            raise ValueError(
+                f"Anneal.kind must be 'geometric' or 'linear', "
+                f"got {self.kind!r}")
+
+    def betas(self, chains: int | None = None) -> jax.Array:
+        t = jnp.linspace(0.0, 1.0, self.n_sweeps)
+        if self.kind == "geometric":
+            return (self.beta_start
+                    * (self.beta_end / self.beta_start) ** t).astype(
+                        jnp.float32)
+        return (self.beta_start
+                + (self.beta_end - self.beta_start) * t).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Tempered(Schedule):
+    """Per-chain beta ladder -> (S, B) matrix (parallel-tempering replicas).
+
+    ``ladder`` is one beta per chain; every sweep runs the whole ladder.
+    The replica-exchange *controller* (core/tempering.py) permutes the
+    ladder between swap rounds by passing explicit betas to
+    ``Session.sample`` — the schedule fixes the shape contract.
+    """
+
+    ladder: tuple = (1.0,)
+
+    @staticmethod
+    def geometric(beta_min: float, beta_max: float, n_replicas: int,
+                  n_sweeps: int = 1) -> "Tempered":
+        r = jnp.arange(n_replicas) / max(n_replicas - 1, 1)
+        ladder = beta_min * (beta_max / beta_min) ** r
+        return Tempered(n_sweeps=n_sweeps,
+                        ladder=tuple(float(b) for b in ladder))
+
+    def betas(self, chains: int | None = None) -> jax.Array:
+        ladder = jnp.asarray(self.ladder, jnp.float32)
+        if chains is not None and ladder.shape[0] != chains:
+            raise ValueError(
+                f"Tempered ladder has {ladder.shape[0]} rungs but the spec "
+                f"runs {chains} chains; one beta per chain is required")
+        return jnp.broadcast_to(ladder, (self.n_sweeps, ladder.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# The spec
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class SamplerSpec:
+    """Frozen, pytree-registered description of one solver instance.
+
+    The mismatch arrays are the pytree leaves (a spec can be device_put /
+    donated / tree-mapped); everything else — graph, hardware sigmas,
+    noise/backend/schedule choices — is static aux data fixed at trace
+    time.  ``Session(spec)`` validates and compiles it; specs themselves
+    hold no jax state and read no environment variables.
+    """
+
+    graph: ChimeraGraph
+    hw: HardwareConfig
+    mismatch: Mismatch | SparseMismatch
+    noise: str = "philox"
+    backend: str = "auto"
+    schedule: Schedule | None = None
+    chains: int = 256
+    beta: float = 1.0           # base inverse temperature (stats / CD / hist)
+    w_scale: float = 0.05       # weight-LSB -> coupling units
+    decimation: int = 8         # LFSR clocks per half-sweep
+    attach_sparse: bool = True  # carry the Chimera slot layout on dense chips
+    interpret: bool | None = None  # Pallas interpret; None -> env at compile
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        aux = tuple(
+            getattr(self, f.name) for f in dataclasses.fields(self)
+            if f.name != "mismatch")
+        return (self.mismatch,), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names = [f.name for f in dataclasses.fields(cls)
+                 if f.name != "mismatch"]
+        return cls(mismatch=children[0], **dict(zip(names, aux)))
+
+    # -- derived properties ---------------------------------------------
+    @property
+    def sparse_native(self) -> bool:
+        """Only the O(D·N) slot model exists (no dense W can ever be built)."""
+        return isinstance(self.mismatch, SparseMismatch)
+
+    @property
+    def has_slot_layout(self) -> bool:
+        """Will programmed chips carry the (D, N) neighbor-table view?"""
+        return self.sparse_native or self.attach_sparse
+
+    def replace(self, **kw) -> "SamplerSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- validation ------------------------------------------------------
+    def validate(self) -> "SamplerSpec":
+        """Static sanity checks; raises ValueError naming the fix."""
+        if self.noise not in NOISE_KINDS:
+            raise ValueError(
+                f"unknown noise {self.noise!r}; pick from {NOISE_KINDS}")
+        if self.backend not in BACKENDS + ("auto",) and \
+                self.backend is not None:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; pick from "
+                f"{BACKENDS + ('auto',)}")
+        if self.backend in FUSED_BACKENDS and \
+                self.noise not in IN_KERNEL_NOISE:
+            raise ValueError(
+                f"backend {self.backend!r} generates noise in-kernel and "
+                f"needs noise='counter' or 'lfsr', got {self.noise!r}")
+        if self.backend in SPARSE_BACKENDS and not self.has_slot_layout:
+            raise ValueError(
+                f"backend {self.backend!r} needs the Chimera slot layout; "
+                f"use attach_sparse=True or a sparse-native mismatch")
+        if self.sparse_native and self.backend in ("ref", "pallas", "fused"):
+            raise ValueError(
+                f"this spec is sparse-native (no dense W exists); backend "
+                f"{self.backend!r} cannot run it — use 'sparse', "
+                f"'fused_sparse', or 'auto'")
+        if self.chains < 1:
+            raise ValueError(f"chains must be >= 1, got {self.chains}")
+        if self.schedule is not None:
+            self.schedule.betas(self.chains)  # raises on ladder mismatch
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Compile-time resolution (the ONLY place env vars are consulted)
+# ---------------------------------------------------------------------------
+def resolve_backend(spec: SamplerSpec) -> str:
+    """Spec backend -> concrete backend string, resolved once at compile.
+
+    Explicit names win; ``auto``/``None`` consults REPRO_PBIT_BACKEND and
+    then the kernels.md model.  The returned string is baked into the
+    Session's closures — no env read ever happens at call time.
+    """
+    b = spec.backend
+    if b in (None, "auto"):
+        env = os.environ.get("REPRO_PBIT_BACKEND")
+        b = env if env else _auto_backend(spec)
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {b!r}; pick from {BACKENDS}")
+    if b in FUSED_BACKENDS and spec.noise not in IN_KERNEL_NOISE:
+        raise ValueError(
+            f"backend {b!r} needs in-kernel noise ('counter' or 'lfsr'), "
+            f"got {spec.noise!r}")
+    if b in ("ref", "pallas", "fused") and spec.sparse_native:
+        raise ValueError(
+            f"REPRO_PBIT_BACKEND={b!r} cannot run a sparse-native spec "
+            f"(no dense W); use 'sparse' or 'fused_sparse'")
+    return b
+
+
+def _auto_backend(spec: SamplerSpec) -> str:
+    """kernels.md policy: prefer the slot layout; fall back by VMEM model."""
+    if spec.has_slot_layout:
+        return ("fused_sparse" if spec.noise in IN_KERNEL_NOISE
+                else "sparse")
+    if spec.noise in IN_KERNEL_NOISE and \
+            dense_vmem_feasible(spec.graph.n_nodes):
+        return "fused"
+    return "ref"
+
+
+def resolve_interpret(spec: SamplerSpec) -> bool:
+    """Pallas interpret mode, resolved once at compile.
+
+    Delegates to the kernel layer's `default_interpret` so the
+    REPRO_PALLAS_INTERPRET parsing rule exists in exactly one place.
+    """
+    if spec.interpret is not None:
+        return bool(spec.interpret)
+    from repro.kernels.ops import default_interpret
+    return default_interpret()

@@ -1,10 +1,10 @@
 """Simulated annealing on the chip (paper Fig. 9a).
 
 On silicon the annealing temperature is a voltage (V_temp) scaling the tanh
-gain; here it is the per-sweep beta passed to the chromatic Gibbs sweep.
-The SK-style spin glass uses Gaussian couplings on the *Chimera edge set*
-(the chip has no other current paths), quantized to 8-bit DAC codes exactly
-as the hardware requires.
+gain; here it is the per-sweep beta of a first-class `api.Anneal` schedule
+compiled into an `api.Session`.  The SK-style spin glass uses Gaussian
+couplings on the *Chimera edge set* (the chip has no other current paths),
+quantized to 8-bit DAC codes exactly as the hardware requires.
 """
 from __future__ import annotations
 
@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pbit
+from repro import api
 from repro.core.cd import PBitMachine, quantize_codes
 from repro.core.chimera import ChimeraGraph
 from repro.core.energy import ising_energy
@@ -28,12 +28,16 @@ class AnnealConfig:
     schedule: str = "geometric"  # or "linear"
     chains: int = 64
 
+    def to_schedule(self) -> api.Anneal:
+        """The declarative `api.Anneal` this config describes."""
+        return api.Anneal(n_sweeps=self.n_sweeps,
+                          beta_start=self.beta_start,
+                          beta_end=self.beta_end, kind=self.schedule)
+
 
 def beta_schedule(cfg: AnnealConfig) -> jnp.ndarray:
-    t = jnp.linspace(0.0, 1.0, cfg.n_sweeps)
-    if cfg.schedule == "geometric":
-        return cfg.beta_start * (cfg.beta_end / cfg.beta_start) ** t
-    return cfg.beta_start + (cfg.beta_end - cfg.beta_start) * t
+    """Deprecated shim: materialize the schedule (use `api.Anneal`)."""
+    return cfg.to_schedule().betas()
 
 
 def sk_instance(graph: ChimeraGraph, key: jax.Array,
@@ -57,21 +61,41 @@ def anneal(
     cfg: AnnealConfig,
     key: jax.Array,
     record_every: int = 10,
+    session: api.Session | None = None,
 ) -> dict:
     """Run SA; returns energy trajectory (measured with the *ideal* digital
     weights — the figure of merit is the true problem energy, while dynamics
-    run through the mismatched analog path, as on the real chip)."""
-    g = machine.graph
-    chip = machine.program(quantize_codes(jnp.asarray(J_codes)),
+    run through the mismatched analog path, as on the real chip).
+
+    ``session`` lets callers (e.g. maxcut.solve_maxcut) supply their own
+    compiled `api.Session`; by default one is compiled from the machine
+    with the config's `api.Anneal` schedule.
+    """
+    if session is None:
+        session = machine.session(schedule=cfg.to_schedule(),
+                                  chains=cfg.chains)
+    else:
+        # a mismatched schedule would silently truncate the trajectory
+        # (traj[sel] clamps out-of-range sweep indices) — reject it here
+        if session.spec.chains != cfg.chains:
+            raise ValueError(
+                f"session runs {session.spec.chains} chains but "
+                f"cfg.chains={cfg.chains}")
+        if session.default_betas is None or \
+                session.default_betas.shape[0] != cfg.n_sweeps:
+            have = (None if session.default_betas is None
+                    else session.default_betas.shape[0])
+            raise ValueError(
+                f"session schedule has {have} sweeps but "
+                f"cfg.n_sweeps={cfg.n_sweeps}; build it with "
+                f"schedule=cfg.to_schedule()")
+    chip = session.program(quantize_codes(jnp.asarray(J_codes)),
                            quantize_codes(jnp.asarray(h_codes)))
     k1, k2 = jax.random.split(key)
-    m0 = pbit.random_spins(k1, cfg.chains, g.n_nodes)
-    noise_state, noise_fn = machine.noise_fn(k2, cfg.chains)
-    betas = beta_schedule(cfg) * machine.w_scale ** 0  # beta acts on LSB units
+    m0 = session.random_spins(k1)
+    noise_state = session.noise_state(k2)
 
-    _, _, traj = pbit.gibbs_sample(
-        chip, jnp.asarray(g.color), m0, betas, noise_state, noise_fn,
-        collect=True, backend=machine.backend)
+    _, _, traj = session.sample(chip, m0, noise_state, collect=True)
     Jf = jnp.asarray(J_codes, jnp.float32)
     hf = jnp.asarray(h_codes, jnp.float32)
     sel = np.arange(0, cfg.n_sweeps, record_every)

@@ -17,30 +17,31 @@ quantized to signed 8-bit DAC codes on every (re)program, matching the
 chip's digital weight storage.  The master couplings live on the *edge
 list* — one float per physical coupler, exactly the chip's weight-DAC
 count — so the CD update is O(E) and never touches an (n, n) matrix.
+
+All sampling and programming goes through `repro.api.Session`:
+`PBitMachine` is the convenience wrapper that owns the chip description
+(graph + mismatch + noise/backend choices) and hands out compiled
+sessions; the schedule handling and backend dispatch that used to live
+here are gone (see docs/api.md).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import energy as energy_mod
 from repro.core import pbit
 from repro.core.chimera import ChimeraGraph
 from repro.core.hardware import (
-    WMAX,
-    WMIN,
     EffectiveChip,
     HardwareConfig,
     Mismatch,
     SparseMismatch,
-    attach_sparse,
-    program_weights,
-    program_weights_sparse,
+    quantize_codes,  # noqa: F401  (re-export: legacy import site)
     sample_mismatch,
     sample_mismatch_sparse,
 )
@@ -56,6 +57,10 @@ class PBitMachine:
     `SparseMismatch` (create(..., sparse=True)) nothing O(n²) is ever
     built: the machine only supports the sparse backends, which is the
     point — it instantiates at lattice sizes where the dense model cannot.
+
+    The machine is sugar over `api.SamplerSpec`/`api.Session`:
+    ``sampler_spec()`` builds the declarative spec, ``session()`` compiles
+    (and caches) sessions per (schedule, chains).
     """
 
     graph: ChimeraGraph
@@ -97,72 +102,52 @@ class PBitMachine:
             self._nbr_tables = nt
         return nt
 
-    # -- programming ----------------------------------------------------
+    # -- the api seam ----------------------------------------------------
+    def sampler_spec(self, schedule: api.Schedule | None = None,
+                     chains: int = 256, **kw) -> api.SamplerSpec:
+        """The declarative `api.SamplerSpec` for this chip instance."""
+        return api.SamplerSpec(
+            graph=self.graph, hw=self.hw, mismatch=self.mismatch,
+            noise=self.noise, backend=self.backend, schedule=schedule,
+            chains=chains, beta=self.beta, w_scale=self.w_scale, **kw)
+
+    def session(self, schedule: api.Schedule | None = None,
+                chains: int = 256) -> api.Session:
+        """Compiled `api.Session`, cached per (schedule, chains)."""
+        cache = getattr(self, "_sessions", None)
+        if cache is None:
+            cache = {}
+            self._sessions = cache
+        key = (schedule, chains)
+        ses = cache.get(key)
+        if ses is None:
+            ses = api.Session(self.sampler_spec(schedule, chains))
+            cache[key] = ses
+        return ses
+
+    # -- programming (the spec-level api layer: needs no backend/noise
+    # resolution, so it works even where a full Session would not compile)
     def program(self, J_codes: jax.Array, h_codes: jax.Array,
                 enable: jax.Array | None = None) -> EffectiveChip:
         """Program dense (n, n) symmetric codes (chip-scale convenience)."""
-        nbr_idx, nbr_mask, _, _ = self.neighbor_tables()
-        if enable is None:
-            enable = jnp.abs(J_codes) > 0
-        if self.sparse_native:
-            rows = jnp.arange(self.graph.n_nodes)[None, :]
-            idx = jnp.asarray(nbr_idx)
-            chip = program_weights_sparse(
-                jnp.asarray(J_codes)[rows, idx], h_codes,
-                jnp.asarray(enable)[rows, idx], self.mismatch, self.hw,
-                idx, jnp.asarray(nbr_mask))
-        else:
-            adj = jnp.asarray(self.graph.adjacency())
-            chip = program_weights(J_codes, h_codes, enable, self.mismatch,
-                                   self.hw, adjacency=adj,
-                                   neighbors=jnp.asarray(nbr_idx))
-        return self._scale(chip)
+        return api.program(self.sampler_spec(), J_codes, h_codes, enable,
+                           tables=self.neighbor_tables())
 
     def program_edges(self, J_edge_codes: jax.Array, h_codes: jax.Array
                       ) -> EffectiveChip:
-        """Program per-edge codes (E,) — the CD master-weight layout.
-
-        Sparse-native machines scatter straight into the (D, n) slot
-        layout (two O(E) scatters, one per coupler direction); dense
-        machines scatter to the symmetric (n, n) code matrix first.
-        """
-        nbr_idx, nbr_mask, slot_ij, slot_ji = self.neighbor_tables()
-        e = self.graph.edges
-        codes = jnp.asarray(J_edge_codes)
-        if self.sparse_native:
-            D = nbr_idx.shape[0]
-            n = self.graph.n_nodes
-            J_slots = (jnp.zeros((D, n), codes.dtype)
-                       .at[slot_ij, e[:, 0]].set(codes)
-                       .at[slot_ji, e[:, 1]].set(codes))
-            chip = program_weights_sparse(
-                J_slots, h_codes, jnp.abs(J_slots) > 0, self.mismatch,
-                self.hw, jnp.asarray(nbr_idx), jnp.asarray(nbr_mask))
-            return self._scale(chip)
-        n = self.graph.n_nodes
-        J = (jnp.zeros((n, n), codes.dtype)
-             .at[e[:, 0], e[:, 1]].set(codes)
-             .at[e[:, 1], e[:, 0]].set(codes))
-        return self.program(J, h_codes)
+        """Program per-edge codes (E,) — the CD master-weight layout."""
+        return api.program_edges(self.sampler_spec(), J_edge_codes, h_codes,
+                                 tables=self.neighbor_tables())
 
     def program_master(self, Jm: jax.Array, hm: jax.Array) -> EffectiveChip:
         """Quantize float master weights — edge-list (E,) or dense (n, n) —
         to 8-bit DAC codes and program."""
-        Jm = jnp.asarray(Jm)
-        if Jm.ndim == 1:
-            return self.program_edges(quantize_codes(Jm), quantize_codes(hm))
-        return self.program(quantize_codes(Jm), quantize_codes(hm))
-
-    def _scale(self, chip: EffectiveChip) -> EffectiveChip:
-        # external-resistor scale: DAC LSB units -> neuron-input units
-        upd = {"h": chip.h * self.w_scale}
-        if chip.W is not None:
-            upd["W"] = chip.W * self.w_scale
-        if chip.nbr_w is not None:
-            upd["nbr_w"] = chip.nbr_w * self.w_scale
-        return dataclasses.replace(chip, **upd)
+        return api.program_master(self.sampler_spec(), Jm, hm,
+                                  tables=self.neighbor_tables())
 
     def noise_fn(self, key: jax.Array, batch: int):
+        """Legacy noise constructor: (state, step).  New code should use
+        ``session().noise_state(key)`` — the Session owns the step fn."""
         if self.noise == "lfsr":
             init, step = pbit.make_lfsr_noise(self.graph, batch)
             return init(key), step
@@ -170,11 +155,6 @@ class PBitMachine:
             init, step = pbit.make_counter_noise(batch, self.graph.n_nodes)
             return init(key), step
         return key, pbit.make_philox_noise(batch, self.graph.n_nodes)
-
-
-def quantize_codes(w: jax.Array, lsb: float = 1.0) -> jax.Array:
-    """Float master weights -> signed 8-bit DAC codes."""
-    return jnp.clip(jnp.round(w / lsb), WMIN, WMAX).astype(jnp.int32)
 
 
 @dataclasses.dataclass
@@ -193,18 +173,9 @@ class CDConfig:
     momentum: float = 0.0      # heavy-ball on the correlation gradient
 
 
-def _phase_stats(machine, chip, color, edges, m0, n_sweeps, burn_in,
-                 noise_state, noise_fn, clamp_mask=None, clamp_values=None):
-    return pbit.gibbs_stats(
-        chip, color, m0, machine.beta, n_sweeps, burn_in,
-        noise_state, noise_fn, edges,
-        clamp_mask=clamp_mask, clamp_values=clamp_values,
-        backend=machine.backend)
-
-
 def make_cd_step(machine: PBitMachine, cfg: CDConfig,
                  visible_idx: np.ndarray):
-    """Build the jitted one-epoch CD update.
+    """Build the jitted one-epoch CD update (shim over `Session.make_cd_step`).
 
     Returns step(Jm, hm, data_vis, m, noise_state, vel) ->
       (Jm, hm, m, noise_state, vel, metrics) where Jm is the (n_edges,)
@@ -214,51 +185,7 @@ def make_cd_step(machine: PBitMachine, cfg: CDConfig,
     gradient is already an edge-list quantity (<m_i m_j>+ - <m_i m_j>-),
     so the weight update is a pure O(E) axpy.
     """
-    g = machine.graph
-    edges = jnp.asarray(g.edges)
-    color = jnp.asarray(g.color)
-    n = g.n_nodes
-    vis = jnp.asarray(visible_idx)
-    clamp_mask = jnp.zeros((n,), bool).at[vis].set(True)
-
-    # the noise *step* fn is static (closed over scatter tables); the noise
-    # *state* threads through `step` as a carry.
-    _, noise_fn = machine.noise_fn(jax.random.PRNGKey(0), cfg.chains)
-
-    @jax.jit
-    def step(Jm, hm, data_vis, m, noise_state, vel):
-        chip = machine.program_edges(quantize_codes(Jm), quantize_codes(hm))
-        clamp_values = jnp.zeros((cfg.chains, n), jnp.float32)
-        clamp_values = clamp_values.at[:, vis].set(data_vis)
-
-        # positive phase: visibles pinned to data
-        pos_s, pos_c, m_pos, noise_state = _phase_stats(
-            machine, chip, color, edges, m, cfg.pos_sweeps, cfg.burn_in,
-            noise_state, noise_fn, clamp_mask, clamp_values)
-        # negative phase: CD-k from the positive-phase state, or from the
-        # persistent chains (PCD — the chip never reinitializes; it just
-        # keeps free-running between weight reprograms)
-        neg_init = m if cfg.persistent else m_pos
-        neg_s, neg_c, m_neg, noise_state = _phase_stats(
-            machine, chip, color, edges, neg_init, cfg.cd_k, cfg.burn_in,
-            noise_state, noise_fn)
-
-        gJ = pos_c - neg_c
-        gh = pos_s - neg_s
-        vel_J, vel_h = vel
-        vel_J = cfg.momentum * vel_J + gJ
-        vel_h = cfg.momentum * vel_h + gh
-        Jm = (1.0 - cfg.weight_decay) * Jm + cfg.lr * vel_J
-        hm = (1.0 - cfg.weight_decay) * hm + cfg.lr * cfg.h_lr_scale * vel_h
-        Jm = jnp.clip(Jm, WMIN, WMAX)
-        hm = jnp.clip(hm, WMIN, WMAX)
-        metrics = {
-            "corr_err": jnp.abs(pos_c - neg_c).mean(),
-            "mean_err": jnp.abs(pos_s - neg_s).mean(),
-        }
-        return Jm, hm, m_neg, noise_state, (vel_J, vel_h), metrics
-
-    return step
+    return machine.session(chains=cfg.chains).make_cd_step(cfg, visible_idx)
 
 
 def sample_visible_dist(machine: PBitMachine, Jm, hm,
@@ -268,19 +195,19 @@ def sample_visible_dist(machine: PBitMachine, Jm, hm,
     """Free-run the programmed chip and histogram the visible marginal.
 
     Jm may be edge-list (E,) or dense (n, n) float master weights.  The
-    histogram streams (pbit.gibbs_visible_hist): on the scan backends it
+    histogram streams (`Session.visible_hist`): on the scan backends it
     folds into the sweep loop, on the fused backends it accumulates inside
     the kernel — the (sweeps, chains, N) trajectory never materializes.
     """
-    g = machine.graph
-    chip = machine.program_master(Jm, hm)
+    session = machine.session(
+        schedule=api.Constant(beta=machine.beta, n_sweeps=sweeps),
+        chains=chains)
+    chip = session.program_master(Jm, hm)
     k1, k2 = jax.random.split(key)
-    m0 = pbit.random_spins(k1, chains, g.n_nodes)
-    noise_state, noise_fn = machine.noise_fn(k2, chains)
-    betas = jnp.full((sweeps,), machine.beta, jnp.float32)
-    counts, _, _ = pbit.gibbs_visible_hist(
-        chip, jnp.asarray(g.color), m0, betas, burn_in, noise_state,
-        noise_fn, visible_idx, backend=machine.backend)
+    m0 = session.random_spins(k1)
+    noise_state = session.noise_state(k2)
+    counts, _, _ = session.visible_hist(chip, m0, noise_state, visible_idx,
+                                        burn_in)
     counts = np.asarray(counts, np.float64)
     return counts / max(counts.sum(), 1.0)
 
@@ -318,13 +245,14 @@ def train_cd(
     """Full in-situ CD training loop against a target visible distribution."""
     g = machine.graph
     n, nv = g.n_nodes, len(visible_idx)
-    step = make_cd_step(machine, cfg, visible_idx)
+    session = machine.session(chains=cfg.chains)
+    step = session.make_cd_step(cfg, visible_idx)
 
     key, k1, k2, k3 = jax.random.split(key, 4)
     Jm = jnp.zeros((g.n_edges,), jnp.float32)
     hm = jnp.zeros((n,), jnp.float32)
-    m = pbit.random_spins(k1, cfg.chains, n)
-    noise_state, _ = machine.noise_fn(k2, cfg.chains)
+    m = session.random_spins(k1)
+    noise_state = session.noise_state(k2)
 
     # enumerate visible configs for sampling data from the target dist
     codes = energy_mod.all_states(nv)  # (2^nv, nv) ±1, code order

@@ -327,7 +327,8 @@ def make_lattice_anneal(
         *[P(row_axes, col_axes) for _ in range(12)])
     out_specs = (LatticeState(P(row_axes, col_axes), P(row_axes, col_axes)),
                  P())
-    fn = jax.shard_map(
+    from repro.launch.mesh import shard_map as shard_map_compat
+    fn = shard_map_compat(
         local_run, mesh=mesh,
         in_specs=(chip_specs, P(), P()),
         out_specs=out_specs,

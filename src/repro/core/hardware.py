@@ -33,6 +33,11 @@ from repro.core.chimera import ChimeraGraph
 WMIN, WMAX = -128, 127  # 8-bit signed DAC codes
 
 
+def quantize_codes(w: jax.Array, lsb: float = 1.0) -> jax.Array:
+    """Float master weights -> signed 8-bit DAC codes."""
+    return jnp.clip(jnp.round(w / lsb), WMIN, WMAX).astype(jnp.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class HardwareConfig:
     """Process-variation sigmas (fraction of nominal unless noted)."""

@@ -26,6 +26,15 @@ class HwAwareConfig:
     min_ndim: int = 2             # only quantize matrices/tensors, not norms
     min_size: int = 4096          # skip tiny params (biases, scales)
 
+    @staticmethod
+    def from_chip(hw, bits: int = 8) -> "HwAwareConfig":
+        """Derive QAT sigmas from a chip `HardwareConfig` so the STE
+        forward models the same silicon an `api.SamplerSpec` samples:
+        the Gilbert-multiplier gain spread becomes the per-channel gain
+        mismatch and the R-2R branch spread the per-bit DNL."""
+        return HwAwareConfig(bits=bits, sigma_gain=hw.sigma_edge_gain,
+                             sigma_bit=hw.sigma_dac_bit)
+
 
 def _fake_quant(w: jax.Array, bits: int) -> jax.Array:
     """Symmetric per-tensor fake quantization with STE."""

@@ -11,9 +11,9 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core.annealing import AnnealConfig, anneal
 from repro.core.cd import PBitMachine
 from repro.core.chimera import ChimeraGraph
@@ -69,9 +69,15 @@ def maxcut_codes(problem: MaxCutProblem, n_nodes: int,
 
 
 def solve_maxcut(machine: PBitMachine, problem: MaxCutProblem,
-                 cfg: AnnealConfig, key: jax.Array) -> dict:
+                 cfg: AnnealConfig, key: jax.Array,
+                 session: api.Session | None = None) -> dict:
     J, h = maxcut_codes(problem, machine.graph.n_nodes)
-    out = anneal(machine, J, h, cfg, key)
+    # the sampler is an api.Session compiled once for the anneal schedule;
+    # Max-Cut just programs antiferromagnetic codes onto it
+    if session is None:
+        session = machine.session(schedule=cfg.to_schedule(),
+                                  chains=cfg.chains)
+    out = anneal(machine, J, h, cfg, key, session=session)
     cut = problem.cut_value(out["best_state"])
     # greedy 1-opt polish (the chip reads out spins; polishing is host-side)
     m = out["best_state"].copy()

@@ -34,10 +34,15 @@ Execution backends (see docs/kernels.md):
                VMEM-resident.  Needs "counter" or "lfsr" noise.
 Selected per call via the ``backend=`` argument, or globally via the
 REPRO_PBIT_BACKEND environment variable (used when backend is None/"auto").
+
+This module is the *engine* layer.  Workload code builds samplers through
+`repro.api` (a declarative SamplerSpec compiled into a Session) which
+resolves backend/interpret/noise/schedule once and calls in here with
+everything explicit; the free functions keep their legacy env-consulting
+defaults as deprecation shims (docs/api.md has the migration table).
 """
 from __future__ import annotations
 
-import functools
 import os
 from typing import Callable, NamedTuple
 
@@ -224,13 +229,14 @@ def make_sweep_fn(
     return sweep
 
 
-def _resolve_kernel(backend: str, kernel: Callable | None) -> Callable | None:
+def _resolve_kernel(backend: str, kernel: Callable | None,
+                    interpret: bool | None = None) -> Callable | None:
     """Half-sweep implementation for the scan-based backends."""
     if kernel is not None:
         return kernel
     if backend == "pallas":
         from repro.kernels import ops as kernel_ops
-        return kernel_ops.make_kernel_half_sweep()
+        return kernel_ops.make_kernel_half_sweep(interpret=interpret)
     if backend in ("sparse", "fused_sparse"):
         # "fused_sparse" lands here only on the collect=True fallback
         from repro.kernels import ops as kernel_ops
@@ -250,6 +256,7 @@ def gibbs_sample(
     collect: bool = False,
     kernel: Callable | None = None,
     backend: str | None = None,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array | None]:
     """Run n_sweeps sweeps.  Returns (final_m, noise_state, traj|None).
 
@@ -260,6 +267,9 @@ def gibbs_sample(
     env var, default "ref").  The fused engine runs every sweep inside one
     kernel launch; it cannot emit per-sweep trajectories, so ``collect``
     falls back to the scan path.
+    interpret: Pallas interpret mode for the kernel backends (None -> the
+    REPRO_PALLAS_INTERPRET env default; api.Session resolves it once at
+    compile and passes it explicitly).
     """
     backend = resolve_backend(backend)
     # an explicit kernel= always wins (custom half-sweep injection): the
@@ -270,11 +280,11 @@ def gibbs_sample(
             init_m, chip, color, betas, noise_state,
             getattr(noise_fn, "spec", None),
             clamp_mask=clamp_mask, clamp_values=clamp_values,
-            sparse=(backend == "fused_sparse"))
+            sparse=(backend == "fused_sparse"), interpret=interpret)
         return m, ns, None
 
     sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
-                          _resolve_kernel(backend, kernel))
+                          _resolve_kernel(backend, kernel, interpret))
 
     def body(carry, beta):
         nxt = sweep(carry, beta)
@@ -299,6 +309,7 @@ def gibbs_stats(
     clamp_values: jax.Array | None = None,
     kernel: Callable | None = None,
     backend: str | None = None,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Accumulate first/second moments on-line (no trajectory storage).
 
@@ -323,7 +334,7 @@ def gibbs_stats(
             init_m, chip, color, betas, noise_state,
             getattr(noise_fn, "spec", None),
             clamp_mask=clamp_mask, clamp_values=clamp_values,
-            measured=measured, sparse=sparse)
+            measured=measured, sparse=sparse, interpret=interpret)
         scale = denom * init_m.shape[0]
         if sparse:
             # edge (i, j) lives at slot row d with nbr_idx[d, i] == j
@@ -334,7 +345,7 @@ def gibbs_stats(
         return s_sum / scale, c_edge / scale, m, ns
 
     sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
-                          _resolve_kernel(backend, kernel))
+                          _resolve_kernel(backend, kernel, interpret))
 
     def body(carry, inp):
         state, s_sum, c_sum = carry
@@ -366,6 +377,7 @@ def gibbs_visible_hist(
     noise_fn: NoiseFn,
     visible_idx: np.ndarray,
     backend: str | None = None,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Free-run and histogram the visible bit patterns, streaming.
 
@@ -392,11 +404,12 @@ def gibbs_visible_hist(
                 and nv <= MAX_HIST_VISIBLE):
             m, ns, hist = kernel_ops.fused_visible_hist(
                 init_m, chip, color, betas, noise_state, spec, visible_idx,
-                measured, sparse=(backend == "fused_sparse"))
+                measured, sparse=(backend == "fused_sparse"),
+                interpret=interpret)
             return hist, m, ns
 
     sweep = make_sweep_fn(chip, color, noise_fn, None, None,
-                          _resolve_kernel(backend, None))
+                          _resolve_kernel(backend, None, interpret))
     vis = jnp.asarray(visible_idx)
     pow2 = jnp.asarray(2 ** np.arange(nv), jnp.int32)
 

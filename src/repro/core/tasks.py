@@ -4,6 +4,10 @@ The chip learns *probability distributions* over visible spins: a gate is
 represented by the uniform distribution over its valid truth-table rows
 (invalid rows get probability 0).  Visible spins live on one side of one or
 two Chimera cells (a 4:4 RBM per cell, per the paper), hiddens on the other.
+
+Tasks are pure data; ``BoltzmannTask.train`` / ``.sample_dist`` are the
+workload entry points, and they construct samplers exclusively through
+`api.Session` (via core/cd.py's Session-routed training loop).
 """
 from __future__ import annotations
 
@@ -23,6 +27,27 @@ class BoltzmannTask:
     @property
     def n_visible(self) -> int:
         return len(self.visible_idx)
+
+    # -- Session-routed workload entry points ---------------------------
+    def train(self, machine, cfg, key, **kw):
+        """In-situ CD training of this task on ``machine`` (an
+        `api.Session`-backed `PBitMachine`).  Returns a `cd.CDResult`."""
+        from repro.core import cd
+        return cd.train_cd(machine, self.visible_idx, self.target_dist,
+                           cfg, key, **kw)
+
+    def sample_dist(self, machine, Jm, hm, key, **kw) -> np.ndarray:
+        """Empirical visible distribution of the programmed chip (streams
+        through `Session.visible_hist`)."""
+        from repro.core import cd
+        return cd.sample_visible_dist(machine, Jm, hm, self.visible_idx,
+                                      key, **kw)
+
+    def kl_to_target(self, dist: np.ndarray) -> float:
+        """KL(target || dist) — the paper's Fig 7/8 figure of merit."""
+        from repro.core import energy
+        return float(energy.kl_divergence(np.asarray(self.target_dist),
+                                          np.asarray(dist)))
 
 
 def _dist_from_rows(n_vis: int, rows: list[tuple[int, ...]]) -> np.ndarray:

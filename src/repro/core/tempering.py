@@ -8,12 +8,11 @@ EXPERIMENTS §Perf extensions).  Maps to hardware as R chips (or R
 time-multiplexed passes) with an SPI readout + swap controller — the swap
 decision needs only the two replicas' energies.
 
-All replicas advance in one batched chromatic sweep (the chains dimension),
-so the TPU cost over plain multi-chain annealing is just the energy
-evaluation every `swap_every` sweeps.  Sweeps run through the shared
-backend API in core/pbit.py (per-replica betas ride the (n_sweeps, R) beta
-matrix): with backend="fused" each swap round is a single resident-sweep
-kernel launch.
+All replicas advance in one batched chromatic sweep (the chains dimension).
+The ladder is a first-class `api.Tempered` schedule compiled into an
+`api.Session`; each swap round passes the slot-permuted (swap_every, R)
+beta matrix to `Session.sample` explicitly, so with a fused backend each
+round is a single resident-sweep kernel launch.
 """
 from __future__ import annotations
 
@@ -23,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pbit
+from repro import api
 from repro.core.cd import PBitMachine, quantize_codes
 from repro.core.energy import ising_energy
 
@@ -36,10 +35,16 @@ class PTConfig:
     n_sweeps: int = 1000
     swap_every: int = 10
 
+    def to_schedule(self) -> api.Tempered:
+        """The declarative per-replica ladder (one swap round per run)."""
+        return api.Tempered.geometric(self.beta_min, self.beta_max,
+                                      self.n_replicas,
+                                      n_sweeps=self.swap_every)
+
 
 def beta_ladder(cfg: PTConfig) -> jnp.ndarray:
-    return cfg.beta_min * (cfg.beta_max / cfg.beta_min) ** (
-        jnp.arange(cfg.n_replicas) / max(cfg.n_replicas - 1, 1))
+    """Deprecated shim: materialize the ladder (use `api.Tempered`)."""
+    return jnp.asarray(cfg.to_schedule().ladder, jnp.float32)
 
 
 def parallel_tempering(
@@ -51,17 +56,17 @@ def parallel_tempering(
 ) -> dict:
     """Returns best energy/state + replica-exchange statistics."""
     g = machine.graph
-    chip = machine.program(quantize_codes(jnp.asarray(J_codes)),
+    R = cfg.n_replicas
+    session = machine.session(schedule=cfg.to_schedule(), chains=R)
+    chip = session.program(quantize_codes(jnp.asarray(J_codes)),
                            quantize_codes(jnp.asarray(h_codes)))
     Jf = jnp.asarray(J_codes, jnp.float32)
     hf = jnp.asarray(h_codes, jnp.float32)
-    color = jnp.asarray(g.color)
-    R = cfg.n_replicas
 
     k1, k2, k3 = jax.random.split(key, 3)
-    m = pbit.random_spins(k1, R, g.n_nodes)
-    noise_state, noise_fn = machine.noise_fn(k2, R)
-    betas = beta_ladder(cfg)
+    m = session.random_spins(k1)
+    noise_state = session.noise_state(k2)
+    betas = jnp.asarray(session.spec.schedule.ladder, jnp.float32)
 
     n_rounds = cfg.n_sweeps // cfg.swap_every
 
@@ -70,9 +75,7 @@ def parallel_tempering(
         slot_of = jnp.argsort(order)           # replica id -> slot
         bvec = betas[slot_of]                  # per-replica beta
         beta_rows = jnp.broadcast_to(bvec, (cfg.swap_every, R))
-        m, ns, _ = pbit.gibbs_sample(
-            chip, color, m, beta_rows, ns, noise_fn,
-            backend=machine.backend)
+        m, ns, _ = session.sample(chip, m, ns, beta_rows)
         e = ising_energy(m, Jf, hf)                       # (R,)
         # Metropolis swap of adjacent *temperature slots* (even pairs one
         # round, odd pairs the next, chosen by key parity)

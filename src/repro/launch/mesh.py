@@ -19,6 +19,21 @@ except ImportError:  # pragma: no cover
     AxisType = None
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` across jax versions.
+
+    jax >= 0.6 exposes it at the top level with `check_vma`; 0.4.x has
+    `jax.experimental.shard_map.shard_map` with the same knob named
+    `check_rep`.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shmap
+    return _shmap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+
+
 def _mesh(shape, axes) -> Mesh:
     if AxisType is not None:
         return jax.make_mesh(shape, axes,

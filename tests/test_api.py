@@ -1,0 +1,420 @@
+"""The unified solver API: SamplerSpec -> Session parity + validation.
+
+Every Session entry point must be *bit-exact* against the legacy
+free-function path (core/pbit.py called by hand with the same chip, noise
+stream, and betas) for every backend x noise-mode combination on a 2x2
+Chimera — the redesign moves dispatch, it must not move a single bit.
+Also covers spec validation errors and the compile-time resolution of
+backend / env defaults.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import pbit
+from repro.core.cd import CDConfig, PBitMachine, make_cd_step
+from repro.core.chimera import make_chimera
+from repro.core.hardware import HardwareConfig
+
+# (backend, noise) pairs the engine supports (fused needs in-kernel noise)
+BACKEND_NOISE = [
+    ("ref", "philox"), ("ref", "counter"), ("ref", "lfsr"),
+    ("pallas", "philox"), ("pallas", "counter"), ("pallas", "lfsr"),
+    ("sparse", "philox"), ("sparse", "counter"), ("sparse", "lfsr"),
+    ("fused", "counter"), ("fused", "lfsr"),
+    ("fused_sparse", "counter"), ("fused_sparse", "lfsr"),
+]
+
+
+def _machine(backend, noise, key=0, hw=None):
+    g = make_chimera(2, 2)
+    return PBitMachine.create(g, jax.random.PRNGKey(key),
+                              hw or HardwareConfig(), beta=1.0,
+                              noise=noise, backend=backend, w_scale=0.05)
+
+
+def _legacy_noise(machine, chains, key):
+    return machine.noise_fn(key, chains)
+
+
+# ---------------------------------------------------------------------------
+# bit-exact parity: Session vs the legacy free-function path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend,noise", BACKEND_NOISE)
+def test_session_sample_matches_legacy(backend, noise):
+    machine = _machine(backend, noise)
+    g = machine.graph
+    B, S = 6, 7
+    session = machine.session(
+        schedule=api.Constant(beta=0.9, n_sweeps=S), chains=B)
+    assert session.backend == backend
+
+    rng = np.random.default_rng(1)
+    J = np.zeros((g.n_nodes, g.n_nodes), np.int32)
+    vals = rng.integers(-60, 60, g.n_edges)
+    J[g.edges[:, 0], g.edges[:, 1]] = vals
+    J[g.edges[:, 1], g.edges[:, 0]] = vals
+    h = rng.integers(-20, 20, g.n_nodes).astype(np.int32)
+    chip = session.program(jnp.asarray(J), jnp.asarray(h))
+
+    m0 = session.random_spins(jax.random.PRNGKey(2))
+    ns = session.noise_state(jax.random.PRNGKey(3))
+    m_s, ns_s, _ = session.sample(chip, m0, ns)
+
+    # legacy: same chip, same noise stream, hand-built betas + backend kw
+    state, step = _legacy_noise(machine, B, jax.random.PRNGKey(3))
+    betas = jnp.full((S,), 0.9, jnp.float32)
+    m_l, ns_l, _ = pbit.gibbs_sample(
+        chip, jnp.asarray(g.color), m0, betas, state, step,
+        backend=backend)
+    np.testing.assert_array_equal(np.asarray(m_s), np.asarray(m_l))
+    np.testing.assert_array_equal(np.asarray(ns_s), np.asarray(ns_l))
+
+
+@pytest.mark.parametrize("backend,noise", BACKEND_NOISE)
+def test_session_stats_matches_legacy(backend, noise):
+    machine = _machine(backend, noise, key=4)
+    g = machine.graph
+    B = 5
+    session = machine.session(chains=B)
+    chip = session.program_edges(
+        jnp.asarray(np.random.default_rng(2).integers(-50, 50, g.n_edges),
+                    jnp.int32),
+        jnp.zeros((g.n_nodes,), jnp.int32))
+    m0 = session.random_spins(jax.random.PRNGKey(5))
+    ns = session.noise_state(jax.random.PRNGKey(6))
+    n_sweeps, burn_in = 9, 2
+    s_s, c_s, m_s, ns_s = session.stats(chip, m0, ns, n_sweeps, burn_in)
+
+    state, step = _legacy_noise(machine, B, jax.random.PRNGKey(6))
+    # the legacy CD loop ran gibbs_stats under jit (make_cd_step was
+    # @jax.jit), so the pre-redesign execution to match is the jitted one
+    legacy = jax.jit(lambda c, m, s: pbit.gibbs_stats(
+        c, jnp.asarray(g.color), m, machine.beta, n_sweeps, burn_in,
+        s, step, jnp.asarray(g.edges), backend=backend))
+    s_l, c_l, m_l, ns_l = legacy(chip, m0, state)
+    np.testing.assert_array_equal(np.asarray(m_s), np.asarray(m_l))
+    np.testing.assert_array_equal(np.asarray(s_s), np.asarray(s_l))
+    np.testing.assert_array_equal(np.asarray(c_s), np.asarray(c_l))
+    np.testing.assert_array_equal(np.asarray(ns_s), np.asarray(ns_l))
+
+
+@pytest.mark.parametrize("backend,noise", BACKEND_NOISE)
+def test_session_visible_hist_matches_legacy(backend, noise):
+    machine = _machine(backend, noise, key=7)
+    g = machine.graph
+    B, S, burn = 4, 12, 3
+    session = machine.session(
+        schedule=api.Constant(beta=1.0, n_sweeps=S), chains=B)
+    chip = session.program_edges(
+        jnp.asarray(np.random.default_rng(3).integers(-40, 40, g.n_edges),
+                    jnp.int32),
+        jnp.zeros((g.n_nodes,), jnp.int32))
+    vis = np.array([0, 2, 9])
+    m0 = session.random_spins(jax.random.PRNGKey(8))
+    ns = session.noise_state(jax.random.PRNGKey(9))
+    h_s, m_s, ns_s = session.visible_hist(chip, m0, ns, vis, burn)
+
+    state, step = _legacy_noise(machine, B, jax.random.PRNGKey(9))
+    betas = jnp.full((S,), 1.0, jnp.float32)
+    h_l, m_l, ns_l = pbit.gibbs_visible_hist(
+        chip, jnp.asarray(g.color), m0, betas, burn, state, step, vis,
+        backend=backend)
+    np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_l))
+    np.testing.assert_array_equal(np.asarray(m_s), np.asarray(m_l))
+
+
+@pytest.mark.parametrize("backend,noise",
+                         [("ref", "philox"), ("sparse", "counter"),
+                          ("fused_sparse", "lfsr")])
+def test_session_cd_step_matches_legacy_phases(backend, noise):
+    """One CD epoch through Session.make_cd_step equals composing the
+    legacy clamped/free gibbs_stats phases + update arithmetic by hand."""
+    from repro.core.hardware import WMAX, WMIN, quantize_codes
+
+    machine = _machine(backend, noise, key=10)
+    g = machine.graph
+    cfg = CDConfig(lr=4.0, cd_k=4, pos_sweeps=4, burn_in=1, chains=8,
+                   epochs=1)
+    vis = np.array([0, 1, 8])
+    step = make_cd_step(machine, cfg, vis)
+
+    Jm = jnp.zeros((g.n_edges,), jnp.float32)
+    hm = jnp.zeros((g.n_nodes,), jnp.float32)
+    m = pbit.random_spins(jax.random.PRNGKey(11), cfg.chains, g.n_nodes)
+    state, step_fn = _legacy_noise(machine, cfg.chains,
+                                   jax.random.PRNGKey(12))
+    vel = (jnp.zeros((g.n_edges,)), jnp.zeros((g.n_nodes,)))
+    dv = jnp.asarray(np.tile([[1.0, -1.0, 1.0]], (cfg.chains, 1)),
+                     jnp.float32)
+    Jm2, hm2, m2, ns2, vel2, _ = step(Jm, hm, dv, m, state, vel)
+
+    # legacy composition (jitted as one step, exactly like the old
+    # make_cd_step body was)
+    color = jnp.asarray(g.color)
+    edges = jnp.asarray(g.edges)
+    clamp_mask = jnp.zeros((g.n_nodes,), bool).at[jnp.asarray(vis)].set(True)
+
+    @jax.jit
+    def legacy(Jm, hm, m, state):
+        chip = machine.session(chains=1).program_edges(
+            quantize_codes(Jm), quantize_codes(hm))
+        cv = jnp.zeros((cfg.chains, g.n_nodes)
+                       ).at[:, jnp.asarray(vis)].set(dv)
+        pos_s, pos_c, m_pos, ns = pbit.gibbs_stats(
+            chip, color, m, machine.beta, cfg.pos_sweeps, cfg.burn_in,
+            state, step_fn, edges, clamp_mask=clamp_mask, clamp_values=cv,
+            backend=backend)
+        neg_s, neg_c, m_neg, ns = pbit.gibbs_stats(
+            chip, color, m_pos, machine.beta, cfg.cd_k, cfg.burn_in, ns,
+            step_fn, edges, backend=backend)
+        Jm_l = jnp.clip(Jm + cfg.lr * (pos_c - neg_c), WMIN, WMAX)
+        hm_l = jnp.clip(hm + cfg.lr * (pos_s - neg_s), WMIN, WMAX)
+        return Jm_l, hm_l, m_neg
+
+    Jm_l, hm_l, m_neg = legacy(Jm, hm, m, state)
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(m_neg))
+    np.testing.assert_array_equal(np.asarray(Jm2), np.asarray(Jm_l))
+    np.testing.assert_array_equal(np.asarray(hm2), np.asarray(hm_l))
+
+
+def test_session_clamped_collect_matches_legacy():
+    """Clamped trajectory sampling (the full-adder inference path)."""
+    machine = _machine("ref", "philox", key=13)
+    g = machine.graph
+    B, S = 4, 6
+    session = machine.session(
+        schedule=api.Constant(beta=2.0, n_sweeps=S), chains=B)
+    chip = session.program_edges(
+        jnp.asarray(np.random.default_rng(5).integers(-30, 30, g.n_edges),
+                    jnp.int32),
+        jnp.zeros((g.n_nodes,), jnp.int32))
+    clamp_mask = jnp.zeros((g.n_nodes,), bool).at[jnp.array([0, 1])].set(
+        True)
+    cv = jnp.ones((B, g.n_nodes), jnp.float32)
+    m0 = session.random_spins(jax.random.PRNGKey(14))
+    ns = session.noise_state(jax.random.PRNGKey(15))
+    m_s, _, traj_s = session.sample(chip, m0, ns, clamp_mask=clamp_mask,
+                                    clamp_values=cv, collect=True)
+
+    state, step = _legacy_noise(machine, B, jax.random.PRNGKey(15))
+    betas = jnp.full((S,), 2.0, jnp.float32)
+    m_l, _, traj_l = pbit.gibbs_sample(
+        chip, jnp.asarray(g.color), m0, betas, state, step,
+        clamp_mask=clamp_mask, clamp_values=cv, collect=True,
+        backend="ref")
+    np.testing.assert_array_equal(np.asarray(traj_s), np.asarray(traj_l))
+    np.testing.assert_array_equal(np.asarray(m_s), np.asarray(m_l))
+
+
+def test_session_tempered_betas_match_legacy():
+    """(S, B) per-chain beta matrices through the Session (PT ladder)."""
+    machine = _machine("ref", "counter", key=16)
+    g = machine.graph
+    R = 6
+    sched = api.Tempered.geometric(0.1, 2.0, R, n_sweeps=5)
+    session = machine.session(schedule=sched, chains=R)
+    chip = session.program_edges(
+        jnp.asarray(np.random.default_rng(6).integers(-30, 30, g.n_edges),
+                    jnp.int32),
+        jnp.zeros((g.n_nodes,), jnp.int32))
+    m0 = session.random_spins(jax.random.PRNGKey(17))
+    ns = session.noise_state(jax.random.PRNGKey(18))
+    m_s, _, _ = session.sample(chip, m0, ns)
+
+    state, step = _legacy_noise(machine, R, jax.random.PRNGKey(18))
+    betas = jnp.broadcast_to(
+        jnp.asarray(sched.ladder, jnp.float32), (5, R))
+    m_l, _, _ = pbit.gibbs_sample(chip, jnp.asarray(g.color), m0, betas,
+                                  state, step, backend="ref")
+    np.testing.assert_array_equal(np.asarray(m_s), np.asarray(m_l))
+
+
+def test_sparse_native_spec_roundtrip():
+    """A sparse-native machine (W never built) through the Session."""
+    g = make_chimera(2, 2)
+    machine = PBitMachine.create(g, jax.random.PRNGKey(19),
+                                 HardwareConfig.ideal(), sparse=True,
+                                 noise="counter")
+    session = machine.session(
+        schedule=api.Constant(beta=1.0, n_sweeps=4), chains=4)
+    assert session.backend == "sparse"
+    assert session.spec.sparse_native
+    chip = session.program_edges(
+        jnp.asarray(np.random.default_rng(7).integers(-30, 30, g.n_edges),
+                    jnp.int32),
+        jnp.zeros((g.n_nodes,), jnp.int32))
+    assert chip.W is None
+    st = session.init_state(jax.random.PRNGKey(20))
+    m, ns, _ = session.sample(chip, st.m, st.noise_state)
+    assert set(np.unique(np.asarray(m))) <= {-1.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def test_schedules_materialize():
+    c = api.Constant(beta=0.7, n_sweeps=3).betas()
+    np.testing.assert_array_equal(np.asarray(c),
+                                  np.full(3, 0.7, np.float32))
+    a = api.Anneal(n_sweeps=4, beta_start=0.05, beta_end=3.0).betas()
+    assert a.shape == (4,) and float(a[0]) == pytest.approx(0.05)
+    assert float(a[-1]) == pytest.approx(3.0)
+    lin = api.Anneal(n_sweeps=3, beta_start=0.0, beta_end=1.0,
+                     kind="linear").betas()
+    np.testing.assert_allclose(np.asarray(lin), [0.0, 0.5, 1.0], atol=1e-7)
+    t = api.Tempered.geometric(0.1, 1.6, 5, n_sweeps=2)
+    b = t.betas(5)
+    assert b.shape == (2, 5)
+    ratios = np.asarray(b[0][1:]) / np.asarray(b[0][:-1])
+    np.testing.assert_allclose(ratios, ratios[0], rtol=1e-5)
+
+
+def test_schedules_are_hashable_cache_keys():
+    s1 = api.Anneal(n_sweeps=10, beta_start=0.1, beta_end=2.0)
+    s2 = api.Anneal(n_sweeps=10, beta_start=0.1, beta_end=2.0)
+    assert s1 == s2 and hash(s1) == hash(s2)
+    machine = _machine("ref", "philox")
+    assert machine.session(s1, 4) is machine.session(s2, 4)
+
+
+# ---------------------------------------------------------------------------
+# spec validation + compile-time resolution
+# ---------------------------------------------------------------------------
+def test_spec_validation_errors():
+    machine = _machine("ref", "philox")
+    with pytest.raises(ValueError, match="unknown backend"):
+        api.Session(machine.sampler_spec().replace(backend="mxu"))
+    with pytest.raises(ValueError, match="unknown noise"):
+        api.Session(machine.sampler_spec().replace(noise="xorshift"))
+    with pytest.raises(ValueError, match="in-kernel|counter"):
+        api.Session(machine.sampler_spec().replace(backend="fused",
+                                                   noise="philox"))
+    with pytest.raises(ValueError, match="slot layout"):
+        api.Session(machine.sampler_spec().replace(backend="sparse",
+                                                   attach_sparse=False))
+    with pytest.raises(ValueError, match="chains"):
+        api.Session(machine.sampler_spec().replace(chains=0))
+    with pytest.raises(ValueError, match="rungs|chain"):
+        api.Session(machine.sampler_spec(
+            schedule=api.Tempered(n_sweeps=2, ladder=(0.5, 1.0)),
+            chains=4))
+    with pytest.raises(ValueError, match="geometric"):
+        api.Anneal(kind="cubic")
+    # sparse-native spec cannot run dense backends
+    g = make_chimera(1, 1)
+    sm = PBitMachine.create(g, jax.random.PRNGKey(0),
+                            HardwareConfig.ideal(), sparse=True)
+    with pytest.raises(ValueError, match="sparse-native"):
+        api.Session(sm.sampler_spec().replace(backend="ref"))
+
+
+def test_session_without_schedule_needs_betas():
+    machine = _machine("ref", "philox")
+    session = machine.session(chains=2)
+    chip = session.program_edges(
+        jnp.zeros((machine.graph.n_edges,), jnp.int32),
+        jnp.zeros((machine.graph.n_nodes,), jnp.int32))
+    st = session.init_state(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="schedule"):
+        session.sample(chip, st.m, st.noise_state)
+    m, ns, _ = session.sample(chip, st.m, st.noise_state,
+                              jnp.ones((2,), jnp.float32))
+    assert m.shape == st.m.shape
+
+
+def test_auto_resolution_heuristic_and_env(monkeypatch):
+    machine = _machine("auto", "philox")
+    # slot layout + host noise -> sparse scan
+    assert api.resolve_backend(machine.sampler_spec()) == "sparse"
+    # slot layout + in-kernel noise -> fused_sparse
+    m2 = _machine("auto", "counter")
+    assert api.resolve_backend(m2.sampler_spec()) == "fused_sparse"
+    # dense-only spec, in-kernel noise, W fits VMEM -> fused
+    spec = m2.sampler_spec().replace(attach_sparse=False)
+    assert api.resolve_backend(spec) == "fused"
+    # dense-only + host noise -> ref
+    spec = machine.sampler_spec().replace(attach_sparse=False)
+    assert api.resolve_backend(spec) == "ref"
+    # env var becomes the compile-time default for "auto"
+    monkeypatch.setenv("REPRO_PBIT_BACKEND", "pallas")
+    assert api.resolve_backend(machine.sampler_spec()) == "pallas"
+    # ...but an explicit spec backend wins over the env
+    assert api.resolve_backend(
+        machine.sampler_spec().replace(backend="ref")) == "ref"
+    # a nonsense env value fails at compile, not at call time
+    monkeypatch.setenv("REPRO_PBIT_BACKEND", "gpu")
+    with pytest.raises(ValueError, match="unknown backend"):
+        api.resolve_backend(machine.sampler_spec())
+
+
+def test_no_env_reads_at_call_time(monkeypatch):
+    """Once compiled, a Session ignores later env-var changes."""
+    machine = _machine("auto", "counter")
+    session = machine.session(
+        schedule=api.Constant(beta=1.0, n_sweeps=3), chains=2)
+    assert session.backend == "fused_sparse"
+    chip = session.program_edges(
+        jnp.zeros((machine.graph.n_edges,), jnp.int32),
+        jnp.zeros((machine.graph.n_nodes,), jnp.int32))
+    st = session.init_state(jax.random.PRNGKey(1))
+    m1, _, _ = session.sample(chip, st.m, st.noise_state)
+    monkeypatch.setenv("REPRO_PBIT_BACKEND", "ref")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    m2, _, _ = session.sample(chip, st.m, st.noise_state)  # same closure
+    assert session.backend == "fused_sparse"
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_spec_is_pytree():
+    machine = _machine("ref", "philox")
+    spec = machine.sampler_spec()
+    leaves = jax.tree.leaves(spec)
+    assert len(leaves) == len(jax.tree.leaves(machine.mismatch))
+    spec2 = jax.tree.map(lambda x: x, spec)
+    assert isinstance(spec2, api.SamplerSpec)
+    assert spec2.backend == spec.backend
+    assert spec2.graph is spec.graph
+
+
+def test_vmem_model():
+    assert api.dense_vmem_feasible(440)
+    assert api.dense_vmem_feasible(1024)
+    assert not api.dense_vmem_feasible(8192)
+
+
+def test_programming_needs_no_backend_resolution(monkeypatch):
+    """Chip programming is spec-level: it must work even where a full
+    Session would refuse to compile (bogus env default, fused+philox)."""
+    machine = _machine("fused", "philox")  # invalid *sampling* combo
+    monkeypatch.setenv("REPRO_PBIT_BACKEND", "gpu")  # invalid env default
+    g = machine.graph
+    chip = machine.program_edges(
+        jnp.asarray(np.random.default_rng(8).integers(-30, 30, g.n_edges),
+                    jnp.int32),
+        jnp.zeros((g.n_nodes,), jnp.int32))
+    assert chip.W is not None and chip.nbr_w is not None
+    # the same spec still fails at Session compile, where sampling starts
+    with pytest.raises(ValueError, match="in-kernel|counter"):
+        api.Session(machine.sampler_spec())
+
+
+def test_anneal_rejects_mismatched_session():
+    from repro.core.annealing import AnnealConfig, anneal, sk_instance
+
+    machine = _machine("ref", "philox")
+    J, h = sk_instance(machine.graph, jax.random.PRNGKey(0))
+    cfg = AnnealConfig(n_sweeps=20, chains=4)
+    bad = machine.session(schedule=api.Constant(beta=1.0, n_sweeps=5),
+                          chains=4)
+    with pytest.raises(ValueError, match="sweeps"):
+        anneal(machine, J, h, cfg, jax.random.PRNGKey(1), session=bad)
+    bad_chains = machine.session(schedule=cfg.to_schedule(), chains=2)
+    with pytest.raises(ValueError, match="chains"):
+        anneal(machine, J, h, cfg, jax.random.PRNGKey(1),
+               session=bad_chains)
+    ok = machine.session(schedule=cfg.to_schedule(), chains=cfg.chains)
+    out = anneal(machine, J, h, cfg, jax.random.PRNGKey(1), session=ok)
+    assert np.isfinite(out["best_energy"])
