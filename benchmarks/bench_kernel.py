@@ -17,6 +17,11 @@ Reported per configuration:
     bytes, VMEM residency feasibility, measured sparse-kernel flips/ns.
     The ≥8k-spin rows run *only* on the sparse path — the dense W no
     longer fits a 16 MB VMEM core, the sparse slot layout always does.
+  * `sharded_sweep` (N = 440, 2048, 8192): the mesh-sharded scan path on
+    1 vs 2 forced host devices, with the exact modeled halo bytes per
+    sweep from the partition plan and the TPU ICI-vs-HBM napkin ratio
+    (docs/sharding.md).  Never run concurrently with the test suite on
+    a small box — timings distort.
 
 Usage: python benchmarks/bench_kernel.py [--quick]
 """
@@ -24,6 +29,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
+import sys
+import textwrap
 from pathlib import Path
 
 import jax
@@ -181,6 +189,130 @@ def bench_session_dispatch(N: int = 440, B: int = 64, S: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# mesh-sharded sweep: 1 vs 2 host devices, measured + modeled halo bytes
+# ---------------------------------------------------------------------------
+_SHARDED_WORKER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import json, time
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro import api
+    from repro.core.cd import PBitMachine
+    from repro.core.chimera import make_chimera, make_chip_graph
+    from repro.core.hardware import HardwareConfig
+
+    rows = []
+    for N, B, S in {configs}:
+        g = make_chip_graph() if N == 440 else \\
+            make_chimera(int(round((N / 8) ** 0.5)),
+                         int(round((N / 8) ** 0.5)))
+        mesh = jax.make_mesh((2,), ("data",))
+        mach = PBitMachine.create(g, jax.random.PRNGKey(0),
+                                  HardwareConfig.ideal(), sparse=True,
+                                  noise="counter", mesh=mesh,
+                                  partition=api.Partition(rows="data"))
+        ses = mach.session(schedule=api.Constant(0.7, n_sweeps=S),
+                           chains=B)
+        rng = np.random.default_rng(N)
+        chip = ses.program_edges(
+            jnp.asarray(rng.integers(-60, 60, g.n_edges), jnp.int32),
+            jnp.zeros((g.n_nodes,), jnp.int32))
+        st = ses.init_state(jax.random.PRNGKey(1))
+        m, ns, _ = ses.sample(chip, st.m, st.noise_state)
+        jax.block_until_ready(m)              # compile + warm
+        t0 = time.perf_counter()
+        m, ns, _ = ses.sample(chip, m, ns)
+        jax.block_until_ready(m)
+        rows.append({{"N": N, "us_per_sweep":
+                     (time.perf_counter() - t0) / S * 1e6}})
+    print(json.dumps(rows))
+""")
+
+
+def _sharded_single_device_us(N: int, B: int, S: int) -> float:
+    """Baseline: the same sparse scan path, one device, in-process."""
+    import time
+
+    from repro import api
+    from repro.core.cd import PBitMachine
+    from repro.core.hardware import HardwareConfig
+
+    g = _chimera_for(N)
+    mach = PBitMachine.create(g, jax.random.PRNGKey(0),
+                              HardwareConfig.ideal(), sparse=True,
+                              noise="counter")
+    ses = mach.session(schedule=api.Constant(0.7, n_sweeps=S), chains=B)
+    rng = np.random.default_rng(N)
+    chip = ses.program_edges(
+        jnp.asarray(rng.integers(-60, 60, g.n_edges), jnp.int32),
+        jnp.zeros((g.n_nodes,), jnp.int32))
+    st = ses.init_state(jax.random.PRNGKey(1))
+    m, ns, _ = ses.sample(chip, st.m, st.noise_state)
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    m, ns, _ = ses.sample(chip, m, ns)
+    jax.block_until_ready(m)
+    return (time.perf_counter() - t0) / S * 1e6
+
+
+def bench_sharded_sweep(quick: bool = False) -> dict:
+    """The `sharded_sweep` section: per N, the modeled partition/halo
+    numbers (exact, from the compile-time plan) plus measured sweep times
+    on 1 and 2 forced host devices (2-dev in a subprocess — the device
+    count is locked at first jax init).  On this 2-core CPU box the
+    sharded time mostly measures shard_map overhead; the modeled halo
+    bytes and the ICI/HBM ratio are the TPU-relevant outputs."""
+    from repro.core.distributed import halo_bytes_per_sweep, \
+        plan_row_partition
+    from repro.launch.mesh import halo_vs_hbm_seconds
+
+    shapes = {440: (64, 8), 2048: (16, 4), 8192: (8, 2)}
+    if quick:
+        shapes = {440: (16, 4), 2048: (8, 2), 8192: (4, 1)}
+    rows = []
+    for N, (B, S) in shapes.items():
+        g = _chimera_for(N)
+        plan = plan_row_partition(g, 2)
+        halo = halo_bytes_per_sweep(plan, B)
+        # per-device HBM stream per sweep: slot weights + spins, 2x/sweep
+        hbm = (2 * 2 * SPARSE_DEGREE * N * 4 + 2 * B * N * 4) // 2
+        row = {
+            "N": N, "B": B, "S": S, "n_devices": 2,
+            "n_boundary_spins": plan.n_boundary,
+            "halo_bytes_per_sweep": halo,
+            "halo_bytes_per_sweep_stats": halo_bytes_per_sweep(
+                plan, B, refresh_for_moments=True),
+            "dense_w_replication_bytes": 4 * N * N,
+            **{f"tpu_{k}": v for k, v in halo_vs_hbm_seconds(
+                halo // 2, hbm).items()},
+        }
+        measure = not quick or N == 440
+        if measure:
+            row["cpu_1dev_us_per_sweep"] = _sharded_single_device_us(N, B, S)
+        rows.append(row)
+
+    measured = [(N, *shapes[N]) for N in shapes
+                if not quick or N == 440]
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_WORKER.format(configs=measured)],
+        capture_output=True, text=True, timeout=1200,
+        cwd=Path(__file__).resolve().parent.parent,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    two_dev = {r["N"]: r["us_per_sweep"]
+               for r in json.loads(out.stdout.strip().splitlines()[-1])}
+    for row in rows:
+        if row["N"] in two_dev:
+            row["cpu_2dev_us_per_sweep"] = two_dev[row["N"]]
+    return {"note": "sharded sparse scan path, rows partition over a "
+                    "forced 2-device host mesh (docs/sharding.md)",
+            "configs": rows}
+
+
+# ---------------------------------------------------------------------------
 # dense vs Chimera-native block-sparse
 # ---------------------------------------------------------------------------
 def dense_vs_sparse_model(B: int, N: int, S: int,
@@ -290,6 +422,9 @@ def run(quick: bool = False) -> dict:
     results["session_dispatch"] = bench_session_dispatch(
         440, 16 if quick else 64, 8, iters=3 if quick else 5)
 
+    # mesh-sharded sweep: 1 vs 2 forced host devices + halo-bytes model
+    results["sharded_sweep"] = bench_sharded_sweep(quick)
+
     chip = results["configs"][0]
     emit("kernel_session_dispatch_N440",
          results["session_dispatch"]["session_us_per_call"],
@@ -307,6 +442,11 @@ def run(quick: bool = False) -> dict:
     emit("kernel_sparse_N8192_dense_resident",
          float(sp8192["dense_vmem_resident_feasible"]),
          f"sparse_resident={sp8192['sparse_vmem_resident_feasible']}")
+    sh440 = results["sharded_sweep"]["configs"][0]
+    emit("kernel_sharded_halo_bytes_N440",
+         sh440["halo_bytes_per_sweep"],
+         f"boundary={sh440['n_boundary_spins']} spins, "
+         f"ici/hbm={sh440['tpu_ici_over_hbm']:.3f}")
 
     save_json("kernel_pbit_update", results)
     if not quick:

@@ -1,11 +1,16 @@
-"""The paper's chip at pod scale: anneal a 65,536-cell (1M p-bit) Chimera
-lattice, spatially sharded over all local devices with halo exchange.
+"""The paper's chip at lattice scale: anneal a large Chimera p-bit fabric
+through a mesh-sharded `api.Session` — cell rows partition over the
+device mesh and only the O(√N) chain-coupler boundary spins move between
+devices (ppermute halo exchange), exactly the chip's inter-cell wires.
 
-On real hardware this runs on the 16x16 mesh via launch/dryrun.py --pbit;
-here it runs a smaller lattice over however many host devices exist.
+Nothing O(N²) is ever built: the machine is sparse-native
+(`SparseMismatch`, O(D·N)) and the sharded engine keeps per-device slot
+tables local.  A sharded run reproduces the single-device spin
+trajectory bit for bit (docs/sharding.md).
 
 Run:  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python examples/pbit_lattice_pod.py
+(REPRO_EXAMPLE_QUICK=1 shrinks the lattice for the CI smoke job.)
 """
 import os
 import time
@@ -14,38 +19,62 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import (
-    LatticeSpec,
-    lattice_input_sharding,
-    make_lattice_anneal,
-    make_sk_lattice,
-)
+from repro import api
+from repro.core.cd import PBitMachine
+from repro.core.chimera import make_chimera
+from repro.core.distributed import halo_bytes_per_sweep, sparse_energy
 from repro.core.hardware import HardwareConfig
+from repro.launch.mesh import halo_vs_hbm_seconds, make_line_mesh
 
+quick = bool(os.environ.get("REPRO_EXAMPLE_QUICK"))
+side = 8 if quick else 32          # 32x32 cells = 8192 p-bits
+n_sweeps = 60 if quick else 400
+chains = 4 if quick else 16
+
+graph = make_chimera(side, side)
 n_dev = len(jax.devices())
-rows = cols = {1: 1, 2: 2, 4: 2}.get(n_dev, 4)
-if n_dev == 2:
-    rows, cols = 2, 1
-mesh = jax.make_mesh((rows, max(1, n_dev // rows)), ("data", "model")) \
-    if n_dev > 1 else None
+mesh = make_line_mesh() if n_dev > 1 else None
+print(f"lattice: {side}x{side} cells = {graph.n_nodes} p-bits, "
+      f"{graph.n_edges} couplers over {n_dev} device(s)")
 
-spec = LatticeSpec(64, 64)   # 32,768 p-bits (scale up on real pods)
-print(f"lattice: {spec.cell_rows}x{spec.cell_cols} cells = "
-      f"{spec.n_spins} p-bits over {n_dev} device(s)")
+# sparse-native chip instance: process variation sampled straight into the
+# O(D·N) slot layout; mesh+partition ride the machine into every Session
+machine = PBitMachine.create(
+    graph, jax.random.PRNGKey(0), HardwareConfig(), sparse=True,
+    noise="counter", w_scale=0.05, mesh=mesh,
+    partition=api.Partition(rows="data") if mesh is not None else None)
 
-chip = make_sk_lattice(spec, jax.random.PRNGKey(0), HardwareConfig())
-run = make_lattice_anneal(spec, mesh, n_sweeps=400, record_every=40)
-if mesh is not None:
-    sh = lattice_input_sharding(mesh)
-    chip = jax.device_put(chip, jax.tree.map(lambda _: sh, chip))
+session = machine.session(
+    schedule=api.Anneal(0.05, 2.5, n_sweeps=n_sweeps), chains=chains)
 
-betas = jnp.linspace(0.05, 2.5, 400)
+# random SK instance on the physical couplers (one 8-bit code per edge)
+rng = np.random.default_rng(1)
+codes = jnp.asarray(rng.integers(-100, 101, graph.n_edges), jnp.int32)
+chip = session.program_edges(codes, jnp.zeros((graph.n_nodes,), jnp.int32))
+
+state = session.init_state(jax.random.PRNGKey(2))
+m, ns, _ = session.sample(chip, state.m, state.noise_state)
+jax.block_until_ready(m)           # warm-up: compile + first run
+
 t0 = time.time()
-state, energies = run(chip, jax.random.PRNGKey(1), betas)
-jax.block_until_ready(energies)
+m, ns, _ = session.sample(chip, m, ns)
+jax.block_until_ready(m)
 dt = time.time() - t0
-e = np.asarray(energies)
-e = e[e != 0]
-print("energy trajectory:", " ".join(f"{x:.0f}" for x in e))
-print(f"{400 * spec.n_spins / dt / 1e6:.1f}M spin-updates/s "
-      f"({dt:.1f}s for 400 sweeps)")
+
+e = np.asarray(sparse_energy(chip, m))
+print(f"energy/spin after anneal: best {e.min() / graph.n_nodes:+.3f}, "
+      f"mean {e.mean() / graph.n_nodes:+.3f} over {chains} chains")
+print(f"{n_sweeps * chains * graph.n_nodes / dt / 1e6:.1f}M spin-updates/s "
+      f"({dt:.2f}s for {n_sweeps} sweeps)")
+
+plan = session.partition_plan
+if plan is not None:
+    halo = halo_bytes_per_sweep(plan, chains)
+    # local HBM traffic/sweep/device: slot weights + spins once per sweep
+    hbm = (2 * 6 * graph.n_nodes * 4 + 2 * chains * graph.n_nodes * 4) \
+        // n_dev
+    napkin = halo_vs_hbm_seconds(halo // max(n_dev - 1, 1), hbm)
+    print(f"halo traffic: {halo} B/sweep total "
+          f"({plan.n_boundary} boundary spins); "
+          f"TPUv5e napkin: ICI/HBM time ratio "
+          f"{napkin['ici_over_hbm']:.3f} per device")

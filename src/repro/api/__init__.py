@@ -23,6 +23,7 @@ from repro.api.spec import (
     SPARSE_BACKENDS,
     Anneal,
     Constant,
+    Partition,
     SamplerSpec,
     Schedule,
     Tempered,
@@ -42,7 +43,7 @@ __all__ = [
     "BACKENDS", "FUSED_BACKENDS", "IN_KERNEL_NOISE", "NOISE_KINDS",
     "SPARSE_BACKENDS",
     "Schedule", "Constant", "Anneal", "Tempered",
-    "SamplerSpec", "Session", "SessionState",
+    "Partition", "SamplerSpec", "Session", "SessionState",
     "program", "program_edges", "program_master",
     "dense_vmem_feasible", "resolve_backend", "resolve_interpret",
 ]

@@ -150,10 +150,26 @@ class Session:
         slot_ij, slot_ji = g.edge_slots(nbr_idx)
         self._nbr = (nbr_idx, nbr_mask, slot_ij, slot_ji)
         self._noise_init, self._noise_step = self._make_noise()
+        self._engine = None
+        if spec.mesh is not None:
+            # multi-device execution: the partition plan + shard_map'd
+            # sweep live in core/distributed.ShardedEngine; the closures
+            # below delegate to it with identical array contracts
+            from repro.core.distributed import ShardedEngine
+            self._engine = ShardedEngine(
+                g, spec.mesh, spec.partitioning(), spec.noise,
+                spec.decimation, spec.chains)
         self.default_betas = (
             None if spec.schedule is None
             else spec.schedule.betas(spec.chains))
         self._fns: dict = {}
+
+    @property
+    def partition_plan(self):
+        """The compile-time `core.distributed.RowPartition` of a sharded
+        Session (None when mesh=None) — the public handle for halo /
+        boundary accounting (`distributed.halo_bytes_per_sweep`)."""
+        return None if self._engine is None else self._engine.plan
 
     # ------------------------------------------------------------------
     # construction helpers
@@ -246,6 +262,9 @@ class Session:
 
     def _build_sample(self, collect: bool, clamped: bool):
         def impl(chip, m, ns, betas, cm=None, cv=None):
+            if self._engine is not None:
+                return self._engine.sample(chip, m, ns, betas, cm, cv,
+                                           collect)
             return pbit.gibbs_sample(
                 chip, self._color, m, betas, ns, self._noise_step,
                 clamp_mask=cm, clamp_values=cv, collect=collect,
@@ -279,6 +298,9 @@ class Session:
 
     def _build_stats(self, n_sweeps, burn_in, beta, clamped):
         def impl(chip, m, ns, cm=None, cv=None):
+            if self._engine is not None:
+                return self._engine.stats(chip, m, ns, beta, n_sweeps,
+                                          burn_in, cm, cv)
             return pbit.gibbs_stats(
                 chip, self._color, m, beta, n_sweeps, burn_in, ns,
                 self._noise_step, self._edges, clamp_mask=cm,
@@ -307,6 +329,9 @@ class Session:
 
     def _build_hist(self, visible_idx, burn_in):
         def impl(chip, m, ns, betas):
+            if self._engine is not None:
+                return self._engine.visible_hist(chip, m, ns, betas,
+                                                 burn_in, visible_idx)
             return pbit.gibbs_visible_hist(
                 chip, self._color, m, betas, burn_in, ns, self._noise_step,
                 visible_idx, backend=self.backend,
@@ -347,6 +372,12 @@ class Session:
         beta = self.spec.beta
 
         def phase(chip, m0, n_sweeps, ns, cm=None, cv=None):
+            if self._engine is not None:
+                # sharded phases: rows partition halo-exchanges, a chains
+                # partition runs the Gibbs replicas per-device and
+                # psum-reduces the (E,) gradient moments once per phase
+                return self._engine.stats(chip, m0, ns, beta, n_sweeps,
+                                          cfg.burn_in, cm, cv)
             return pbit.gibbs_stats(
                 chip, self._color, m0, beta, n_sweeps, cfg.burn_in, ns,
                 self._noise_step, self._edges, clamp_mask=cm,

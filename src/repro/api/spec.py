@@ -25,11 +25,22 @@ time) is a spec field, resolved exactly once at `Session` construction:
     (geometric/linear), or `Tempered` (per-chain ladder -> (S, B) betas).
   * ``interpret`` — Pallas interpret mode; ``None`` resolves
     ``REPRO_PALLAS_INTERPRET`` at compile.
+  * ``mesh`` + ``partition`` — multi-device execution.  A `Partition`
+    names the mesh axis the Chimera *cell rows* shard over (contiguous
+    row bands per device, chain-coupler boundary spins halo-exchanged by
+    ``ppermute`` each half-sweep — O(√N) bytes, never a dense W or a
+    global gather) and/or the axis the Gibbs *chains* shard over (CD's
+    embarrassingly parallel dimension; the (E,) edge-list moments are
+    psum-reduced once per phase).  ``mesh=None`` (the default) is
+    bit-exact to the single-device path; a sharded Session reproduces
+    the single-device spin trajectory exactly for the same noise stream
+    (see docs/sharding.md).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -139,6 +150,57 @@ class Tempered(Schedule):
 
 
 # ---------------------------------------------------------------------------
+# Partitioning
+# ---------------------------------------------------------------------------
+def _norm_axes(axes) -> tuple[str, ...]:
+    """None -> (); "data" -> ("data",); tuples pass through."""
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Declarative device-partition choice, resolved at Session compile.
+
+    ``rows`` names the mesh axis (or axes, flattened in order) the Chimera
+    *cell rows* shard over: each device owns a contiguous band of cell
+    rows plus the O(D·N_local) slice of the slot tables, and only the
+    chain-coupler boundary spins (the vertical nodes of the band's first
+    and last cell row — O(√N)) travel between row neighbors, by
+    ``jax.lax.ppermute``, once per half-sweep.  This is exactly the
+    chip's tiling: in-cell K44 and horizontal couplers never leave a
+    device; only inter-cell vertical wires cross the cut.
+
+    ``chains`` names the axis the Gibbs chains shard over — CD's
+    embarrassingly parallel dimension.  Spins are bit-exact vs
+    single-device for any chain count; the accumulated moments are
+    bit-exact when ``chains`` is a power of two (the ±1 partial sums and
+    their dyadic scalings are then exact in float32 — see
+    docs/sharding.md) and 1-ulp-close otherwise.
+
+    Both may be set at once (a 2-D mesh: rows x chains).  Sharded
+    execution always runs the slot-layout scan path ("sparse" backend
+    semantics) — the sweep-resident fused kernel cannot halo-exchange
+    mid-launch — and needs noise that regenerates per (chain, node)
+    coordinate, so ``noise`` must be "counter" or "lfsr".
+    """
+
+    rows: str | tuple[str, ...] | None = "data"
+    chains: str | tuple[str, ...] | None = None
+
+    @property
+    def rows_axes(self) -> tuple[str, ...]:
+        return _norm_axes(self.rows)
+
+    @property
+    def chain_axes(self) -> tuple[str, ...]:
+        return _norm_axes(self.chains)
+
+
+# ---------------------------------------------------------------------------
 # The spec
 # ---------------------------------------------------------------------------
 @jax.tree_util.register_pytree_node_class
@@ -165,6 +227,8 @@ class SamplerSpec:
     decimation: int = 8         # LFSR clocks per half-sweep
     attach_sparse: bool = True  # carry the Chimera slot layout on dense chips
     interpret: bool | None = None  # Pallas interpret; None -> env at compile
+    mesh: Any = None            # jax.sharding.Mesh; None -> single device
+    partition: Partition | None = None  # how to cut over mesh; None -> default
 
     # -- pytree ----------------------------------------------------------
     def tree_flatten(self):
@@ -192,6 +256,13 @@ class SamplerSpec:
 
     def replace(self, **kw) -> "SamplerSpec":
         return dataclasses.replace(self, **kw)
+
+    def partitioning(self) -> Partition | None:
+        """The effective Partition: default rows-over-"data" when a mesh
+        is given without an explicit partition; None when unsharded."""
+        if self.mesh is None:
+            return None
+        return self.partition if self.partition is not None else Partition()
 
     # -- validation ------------------------------------------------------
     def validate(self) -> "SamplerSpec":
@@ -222,7 +293,59 @@ class SamplerSpec:
             raise ValueError(f"chains must be >= 1, got {self.chains}")
         if self.schedule is not None:
             self.schedule.betas(self.chains)  # raises on ladder mismatch
+        self._validate_partition()
         return self
+
+    def _validate_partition(self) -> None:
+        if self.partition is not None and self.mesh is None:
+            raise ValueError(
+                "partition= set but mesh=None; pass the device mesh the "
+                "partition shards over (e.g. launch.mesh.make_host_mesh)")
+        part = self.partitioning()
+        if part is None:
+            return
+        mesh_axes = tuple(self.mesh.axis_names)
+        rows, chains = part.rows_axes, part.chain_axes
+        if not rows and not chains:
+            raise ValueError(
+                "mesh= set but the Partition shards nothing; set "
+                "Partition(rows=...) and/or Partition(chains=...)")
+        for ax in rows + chains:
+            if ax not in mesh_axes:
+                raise ValueError(
+                    f"partition axis {ax!r} not in mesh axes {mesh_axes}")
+        if set(rows) & set(chains):
+            raise ValueError(
+                f"partition axes must be disjoint; {set(rows) & set(chains)}"
+                f" appear in both rows and chains")
+        if self.noise not in IN_KERNEL_NOISE:
+            raise ValueError(
+                f"sharded execution regenerates noise per (chain, node) "
+                f"coordinate and needs noise='counter' or 'lfsr', got "
+                f"{self.noise!r}")
+        if not self.has_slot_layout:
+            raise ValueError(
+                "sharded execution runs on the Chimera slot layout; use "
+                "attach_sparse=True or a sparse-native mismatch")
+        if self.backend not in (None, "auto", "sparse"):
+            raise ValueError(
+                f"sharded Sessions run the slot-layout scan path; backend "
+                f"must be 'sparse' or 'auto', got {self.backend!r} (the "
+                f"fused engines cannot halo-exchange mid-launch)")
+        n_row = 1
+        for ax in rows:
+            n_row *= self.mesh.shape[ax]
+        if n_row > self.graph.rows:
+            raise ValueError(
+                f"cannot shard {self.graph.rows} cell rows over {n_row} "
+                f"devices; grow the lattice or shrink the rows axes")
+        n_chain = 1
+        for ax in chains:
+            n_chain *= self.mesh.shape[ax]
+        if self.chains % n_chain:
+            raise ValueError(
+                f"chains={self.chains} not divisible by the chain-axis "
+                f"size {n_chain}")
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +357,14 @@ def resolve_backend(spec: SamplerSpec) -> str:
     Explicit names win; ``auto``/``None`` consults REPRO_PBIT_BACKEND and
     then the kernels.md model.  The returned string is baked into the
     Session's closures — no env read ever happens at call time.
+
+    A sharded spec (mesh=) always resolves to "sparse": the mesh engine
+    runs the slot-layout scan per shard (validated in the spec), and the
+    env default must not be able to push it onto a backend that cannot
+    halo-exchange.
     """
+    if spec.mesh is not None:
+        return "sparse"
     b = spec.backend
     if b in (None, "auto"):
         env = os.environ.get("REPRO_PBIT_BACKEND")

@@ -70,6 +70,8 @@ class PBitMachine:
     noise: str = "philox"   # "philox" | "counter" | "lfsr"
     backend: str = "auto"   # auto | ref | pallas | fused | sparse | fused_sparse
     w_scale: float = 0.05  # weight-LSB -> coupling units (ext. resistor knob)
+    mesh: object = None     # jax.sharding.Mesh -> multi-device sessions
+    partition: object = None  # api.Partition; None -> rows over "data"
 
     @staticmethod
     def create(graph: ChimeraGraph, key: jax.Array,
@@ -92,6 +94,28 @@ class PBitMachine:
         """True when only the O(D·n) slot model exists (no dense W ever)."""
         return isinstance(self.mismatch, SparseMismatch)
 
+    def to_sparse(self) -> "PBitMachine":
+        """Sparse-native twin reproducing THIS chip instance exactly.
+
+        The dense machine's mismatch is gathered into the O(D·n) slot
+        layout (`SparseMismatch.from_dense` — bit-identical on-graph
+        entries), so programming the same codes on both machines yields
+        the same effective couplings and the same spin trajectories for
+        the same noise stream.  This is the bridge from a dense
+        chip-scale model to lattice-scale sharded sampling: characterize
+        a chip with the full (n, n) analog model, then scale out on the
+        slot layout without changing the physics by a single bit.
+        """
+        if self.sparse_native:
+            return self
+        nbr_idx, _, _, _ = self.neighbor_tables()
+        backend = {"ref": "sparse", "pallas": "sparse",
+                   "fused": "fused_sparse"}.get(self.backend, self.backend)
+        return dataclasses.replace(
+            self, mismatch=SparseMismatch.from_dense(self.mismatch,
+                                                     jnp.asarray(nbr_idx)),
+            backend=backend)
+
     def neighbor_tables(self):
         """(nbr_idx, nbr_mask, slot_ij, slot_ji), cached per machine."""
         nt = getattr(self, "_nbr_tables", None)
@@ -106,6 +130,8 @@ class PBitMachine:
     def sampler_spec(self, schedule: api.Schedule | None = None,
                      chains: int = 256, **kw) -> api.SamplerSpec:
         """The declarative `api.SamplerSpec` for this chip instance."""
+        kw.setdefault("mesh", self.mesh)
+        kw.setdefault("partition", self.partition)
         return api.SamplerSpec(
             graph=self.graph, hw=self.hw, mismatch=self.mismatch,
             noise=self.noise, backend=self.backend, schedule=schedule,

@@ -1,30 +1,36 @@
-"""Pod-scale Chimera lattices: spatial sharding + halo exchange.
+"""Mesh-sharded sparse lattice: row partitioning, halo exchange, engine.
 
-The paper's chip is a 7x8-cell tile.  This module scales the same physics to
-wafer/pod-size lattices (10^6..10^8 p-bits) by tiling the Chimera *cell grid*
-over the device mesh: grid rows -> mesh axis "data" (and "pod"), grid cols ->
-mesh axis "model".  Each device owns a (tile_r, tile_c, 4)-shaped SoA block
-of vertical+horizontal spins and the couplers incident to them; the only
-communication per half-sweep is a 1-cell halo exchange of boundary spins via
-``jax.lax.ppermute`` — O(boundary), exactly like the chip's inter-cell wires.
+The paper's chip tiles a 7x8 Chimera cell grid with only inter-cell wires
+crossing tile boundaries — exactly the communication pattern a device mesh
+wants.  This module is the sharded execution layer behind
+``api.SamplerSpec(mesh=..., partition=api.Partition(...))``:
 
-Structure-of-arrays layout (no dense J at scale):
-  m_v, m_h           (R, C, 4)    vertical / horizontal spins per cell
-  W_vh, W_hv         (R, C, 4, 4) in-cell K44, directional (mismatch!)
-  Wv_dn, Wv_up       (R, C, 4)    vertical inter-cell coupler below cell
-                                  (directional: into r+1 resp. into r)
-  Wh_rt, Wh_lt       (R, C, 4)    horizontal coupler to the right of cell
-  h_v, h_h           (R, C, 4)
-plus per-node neuron mismatch (tanh gain/offset, rand gain, comparator).
+  * `plan_row_partition` cuts the cell grid into contiguous *row bands*
+    (one per device along the partition's rows axis) and precomputes, in
+    numpy at Session compile: the padded per-device node slices, the
+    (D, N_loc) neighbor tables re-indexed into [local | halo_up | halo_dn],
+    the boundary send lists (the O(√N) chain-coupler spins), the
+    per-device edge lists for moment accumulation, and the LFSR cell
+    bands for chip-faithful noise.
+  * `ShardedEngine` compiles the plan into `shard_map`-wrapped sweeps:
+    per half-sweep each device ppermutes its boundary spins to its row
+    neighbors (`kernels/shard_sweep.py`), regenerates its own noise
+    columns from the *global* (chain, node) coordinates, and runs the
+    slot-layout half-sweep locally — no dense W, no global gather, ever.
+    Spins are bit-exact vs the single-device scan backends for the same
+    noise stream.  The Gibbs-chain axis shards the same way (CD's
+    embarrassingly parallel dimension); the (E,) edge-list moments are
+    psum-reduced once per phase.
 
-Chromatic order: color(r, c, side) = (r + c + side) % 2 — a half-sweep for
-color k updates the vertical nodes of parity-k cells and the horizontal
-nodes of parity-(1-k) cells, all in parallel.
+The old structure-of-arrays pod lattice (`LatticeSpec`/`make_sk_lattice`)
+remains as the O(N) *instance generator* for SK-style lattices, but its
+private update loop is gone: `lattice_to_chip` converts the SoA couplings
+into the shared `EffectiveChip` slot layout and `make_lattice_anneal`
+drives the same `api.Session` engine every other workload uses.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -32,9 +38,571 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.hardware import HardwareConfig
+from repro.core import lfsr as lfsr_mod
+from repro.core.chimera import ChimeraGraph, make_chimera
+from repro.core.hardware import EffectiveChip, HardwareConfig
+from repro.kernels.ref import sparse_neuron_input
+from repro.kernels.shard_sweep import halo_exchange, halo_half_sweep
 
 
+# ---------------------------------------------------------------------------
+# Partition plan (numpy, built once at Session compile)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RowPartition:
+    """Static plan: Chimera cell rows -> n_shards contiguous row bands.
+
+    All arrays are numpy; shard-varying tables carry a leading
+    (n_shards,) dim and are fed to `shard_map` as sharded inputs (never
+    baked into the traced closure, which would replicate them).
+    Padding entries (bands own unequal node counts on masked grids) point
+    at real in-bounds nodes and are masked out of updates/scatters.
+    """
+
+    n_shards: int
+    n_loc: int                 # padded nodes per band
+    halo: int                  # padded boundary spins per direction
+    node_starts: np.ndarray    # (n_shards + 1,) global node range bounds
+    part_ids: np.ndarray       # (n_shards, n_loc) global node id
+    valid: np.ndarray          # (n_shards, n_loc) bool
+    inv_ids: np.ndarray        # (N,) global node -> shard * n_loc + p
+    nbr_idx: np.ndarray        # (n_shards, D, n_loc) ext-local indices
+    send_up: np.ndarray        # (n_shards, halo) local idx -> device above
+    send_dn: np.ndarray        # (n_shards, halo) local idx -> device below
+    n_boundary: int            # true boundary spins over internal cuts
+    upd_masks: np.ndarray      # (n_shards, 2, n_loc) color masks & valid
+    e_loc: int                 # padded edges per band
+    edge_e0: np.ndarray        # (n_shards, e_loc) ext-local endpoint 0
+    edge_e1: np.ndarray        # (n_shards, e_loc) ext-local endpoint 1
+    edge_inv: np.ndarray       # (E,) global edge -> shard * e_loc + q
+    # LFSR cell bands (built only when the spec's noise is "lfsr")
+    c_loc: int = 0
+    cell_ids: np.ndarray | None = None   # (n_shards, c_loc) global cell
+    cell_valid: np.ndarray | None = None
+    cell_inv: np.ndarray | None = None   # (n_cells,) -> shard * c_loc + q
+    lfsr_perm: np.ndarray | None = None  # (n_shards, n_loc) local flat col
+
+
+def plan_row_partition(graph: ChimeraGraph, n_shards: int,
+                       with_lfsr: bool = False) -> RowPartition:
+    """Cut the cell grid into contiguous row bands (see RowPartition)."""
+    if n_shards < 1 or n_shards > graph.rows:
+        raise ValueError(
+            f"cannot cut {graph.rows} cell rows into {n_shards} bands")
+    base, rem = divmod(graph.rows, n_shards)
+    counts = [base + (d < rem) for d in range(n_shards)]
+    r_start = np.concatenate([[0], np.cumsum(counts)])       # (n_shards+1,)
+    node_r = np.asarray(graph.node_r)
+    node_side = np.asarray(graph.node_side)
+    # nodes are numbered by (r, c, side, k): each band owns a contiguous
+    # id range regardless of cell masking
+    node_starts = np.searchsorted(node_r, r_start).astype(np.int64)
+    n_loc = max(1, int(np.max(np.diff(node_starts))))
+    N = graph.n_nodes
+    owner = np.searchsorted(node_starts[1:], np.arange(N), side="right")
+
+    # boundary send lists: vertical (side-0) nodes of each band's first /
+    # last cell row — the only nodes chain couplers carry across a cut
+    ids_all = np.arange(N)
+    send_up_ids, send_dn_ids = [], []
+    for d in range(n_shards):
+        sel = slice(node_starts[d], node_starts[d + 1])
+        ids = ids_all[sel]
+        vert = node_side[sel] == 0
+        send_up_ids.append(ids[vert & (node_r[sel] == r_start[d])])
+        send_dn_ids.append(ids[vert & (node_r[sel] == r_start[d + 1] - 1)])
+    H = max(1, max((len(x) for x in send_up_ids + send_dn_ids), default=1))
+    n_boundary = sum(len(send_dn_ids[d]) for d in range(n_shards - 1)) \
+        + sum(len(send_up_ids[d]) for d in range(1, n_shards))
+
+    nbr_g, _ = graph.neighbor_table()
+    D = nbr_g.shape[0]
+    part_ids = np.zeros((n_shards, n_loc), np.int32)
+    valid = np.zeros((n_shards, n_loc), bool)
+    local_nbr = np.zeros((n_shards, D, n_loc), np.int32)
+    send_up = np.zeros((n_shards, H), np.int32)
+    send_dn = np.zeros((n_shards, H), np.int32)
+    for d in range(n_shards):
+        s, e = int(node_starts[d]), int(node_starts[d + 1])
+        n_d = e - s
+        part_ids[d] = min(s, N - 1)
+        part_ids[d, :n_d] = np.arange(s, e)
+        valid[d, :n_d] = True
+        send_up[d, :len(send_up_ids[d])] = send_up_ids[d] - s
+        send_dn[d, :len(send_dn_ids[d])] = send_dn_ids[d] - s
+        g_nbr = nbr_g[:, s:e].astype(np.int64)       # (D, n_d) global ids
+        own = owner[g_nbr]
+        loc = (g_nbr - s).astype(np.int64)           # local by default
+        if d > 0:
+            up = own == d - 1
+            pos = np.searchsorted(send_dn_ids[d - 1], g_nbr[up])
+            if not np.array_equal(send_dn_ids[d - 1][pos], g_nbr[up]):
+                raise AssertionError("cross-band neighbor not on boundary")
+            loc[up] = n_loc + pos
+        if d < n_shards - 1:
+            dn = own == d + 1
+            pos = np.searchsorted(send_up_ids[d + 1], g_nbr[dn])
+            if not np.array_equal(send_up_ids[d + 1][pos], g_nbr[dn]):
+                raise AssertionError("cross-band neighbor not on boundary")
+            loc[dn] = n_loc + H + pos
+        if np.any(np.abs(own - d) > 1):
+            raise AssertionError("neighbor more than one row band away")
+        local_nbr[d, :, :n_d] = loc
+    inv_ids = (owner * n_loc
+               + (np.arange(N) - node_starts[owner])).astype(np.int32)
+
+    color = np.asarray(graph.color)[part_ids]
+    upd_masks = np.stack([(color == c) & valid for c in (0, 1)], axis=1)
+
+    # per-band edge lists (owner = endpoint-0's band; endpoint 1 is local
+    # or in the halo of the band below)
+    e0g, e1g = graph.edges[:, 0].astype(np.int64), \
+        graph.edges[:, 1].astype(np.int64)
+    e_own = owner[e0g]
+    e_loc = max(1, int(np.bincount(e_own, minlength=n_shards).max()))
+    edge_e0 = np.zeros((n_shards, e_loc), np.int32)
+    edge_e1 = np.zeros((n_shards, e_loc), np.int32)
+    edge_inv = np.zeros((graph.n_edges,), np.int32)
+    for d in range(n_shards):
+        s = int(node_starts[d])
+        sel = np.nonzero(e_own == d)[0]
+        edge_e0[d, :len(sel)] = e0g[sel] - s
+        le1 = e1g[sel] - s
+        far = owner[e1g[sel]] == d + 1
+        if np.any(far):
+            pos = np.searchsorted(send_up_ids[d + 1], e1g[sel][far])
+            le1[far] = n_loc + H + pos
+        edge_e1[d, :len(sel)] = le1
+        edge_inv[sel] = d * e_loc + np.arange(len(sel))
+
+    kw: dict[str, Any] = {}
+    if with_lfsr:
+        kw = _plan_lfsr_cells(graph, n_shards, r_start, part_ids, valid,
+                              node_starts)
+    return RowPartition(
+        n_shards=n_shards, n_loc=n_loc, halo=H, node_starts=node_starts,
+        part_ids=part_ids, valid=valid, inv_ids=inv_ids, nbr_idx=local_nbr,
+        send_up=send_up, send_dn=send_dn, n_boundary=int(n_boundary),
+        upd_masks=upd_masks, e_loc=e_loc, edge_e0=edge_e0, edge_e1=edge_e1,
+        edge_inv=edge_inv, **kw)
+
+
+def _plan_lfsr_cells(graph, n_shards, r_start, part_ids, valid, node_starts):
+    """Band the per-cell LFSRs the same way (cells sort by (r, c), exactly
+    the order core/pbit.make_lfsr_noise enumerates them)."""
+    cells = sorted(
+        {(int(r), int(c)) for r, c in zip(graph.node_r, graph.node_c)})
+    n_cells = len(cells)
+    vert = np.stack([graph.cell_nodes(r, c, side=0) for r, c in cells])
+    horiz = np.stack([graph.cell_nodes(r, c, side=1) for r, c in cells])
+    perm_g = lfsr_mod.node_gather_perm(vert, horiz, graph.n_nodes)
+    cell_rows = np.array([r for r, _ in cells])
+    cell_starts = np.searchsorted(cell_rows, r_start)
+    c_loc = max(1, int(np.max(np.diff(cell_starts))))
+    cell_ids = np.zeros((n_shards, c_loc), np.int32)
+    cell_valid = np.zeros((n_shards, c_loc), bool)
+    lfsr_perm = np.zeros(part_ids.shape, np.int32)
+    for d in range(n_shards):
+        s, e = int(cell_starts[d]), int(cell_starts[d + 1])
+        cell_ids[d] = min(s, n_cells - 1)
+        cell_ids[d, :e - s] = np.arange(s, e)
+        cell_valid[d, :e - s] = True
+        pg = perm_g[part_ids[d]]
+        kk, cell = pg // n_cells, pg % n_cells
+        lp = kk * c_loc + (cell - s)
+        lfsr_perm[d] = np.where(valid[d], lp, 0)
+    cell_own = np.searchsorted(cell_starts[1:], np.arange(n_cells),
+                               side="right")
+    cell_inv = (cell_own * c_loc
+                + (np.arange(n_cells) - cell_starts[cell_own])).astype(
+                    np.int32)
+    return dict(c_loc=c_loc, cell_ids=cell_ids, cell_valid=cell_valid,
+                cell_inv=cell_inv, lfsr_perm=lfsr_perm)
+
+
+def halo_bytes_per_sweep(plan: RowPartition, chains: int,
+                         refresh_for_moments: bool = False) -> int:
+    """Total float32 bytes crossing internal band cuts per full sweep.
+
+    Two half-sweeps, each moving every internal boundary spin in both
+    directions, for every chain; +1 exchange per sweep when moments are
+    accumulated (the post-sweep refresh for boundary-edge correlations).
+    O(boundary) = O(√N · n_shards) — compare 4·N² bytes to replicate a
+    dense W.
+    """
+    exchanges = 3 if refresh_for_moments else 2
+    return exchanges * plan.n_boundary * chains * 4
+
+
+# ---------------------------------------------------------------------------
+# The sharded engine (compiled into api.Session closures)
+# ---------------------------------------------------------------------------
+class ShardedEngine:
+    """Plan + mesh -> device-local sweep implementations.
+
+    Built once at `api.Session` compile when the spec carries a mesh.
+    The public impls (`sample` / `stats` / `visible_hist`) keep the exact
+    array contracts of the single-device engine (global (B, N) spins,
+    global noise state) — the Session's closures call them unchanged, so
+    every workload (CD, annealing, tempering, Max-Cut) shards without
+    modification.
+    """
+
+    def __init__(self, graph: ChimeraGraph, mesh: Mesh, partition,
+                 noise: str, decimation: int, chains: int):
+        self.graph = graph
+        self.mesh = mesh
+        self.noise = noise
+        self.decimation = decimation
+        self.chains = chains
+        self.rows_axes = partition.rows_axes
+        self.chain_axes = partition.chain_axes
+        self.n_row = int(np.prod([mesh.shape[a] for a in self.rows_axes],
+                                 dtype=np.int64)) if self.rows_axes else 1
+        self.n_chain = int(np.prod([mesh.shape[a] for a in self.chain_axes],
+                                   dtype=np.int64)) if self.chain_axes else 1
+        if chains % self.n_chain:
+            raise ValueError(f"chains={chains} not divisible by the "
+                             f"chain-axis size {self.n_chain}")
+        self.b_loc = chains // self.n_chain
+        self.plan = plan_row_partition(graph, self.n_row,
+                                       with_lfsr=(noise == "lfsr"))
+        p = self.plan
+        self._row_name = (self.rows_axes[0] if len(self.rows_axes) == 1
+                          else (tuple(self.rows_axes) or None))
+        self._chain_name = (self.chain_axes[0] if len(self.chain_axes) == 1
+                            else (tuple(self.chain_axes) or None))
+        # P-spec dimension entries (None = replicated over that dim)
+        self._r = tuple(self.rows_axes) if self.rows_axes else None
+        self._c = tuple(self.chain_axes) if self.chain_axes else None
+        self._part_ids = jnp.asarray(p.part_ids)
+        self._inv_ids = jnp.asarray(p.inv_ids)
+        self._edge_inv = jnp.asarray(p.edge_inv)
+        self._dev = {
+            "nbr": jnp.asarray(p.nbr_idx),
+            "send_up": jnp.asarray(p.send_up),
+            "send_dn": jnp.asarray(p.send_dn),
+            "upd": jnp.asarray(p.upd_masks),
+            "cols": jnp.asarray(p.part_ids.astype(np.uint32)),
+            "edge_e0": jnp.asarray(p.edge_e0),
+            "edge_e1": jnp.asarray(p.edge_e1),
+        }
+        if noise == "lfsr":
+            self._dev["lfsr_perm"] = jnp.asarray(p.lfsr_perm)
+            self._cell_ids = jnp.asarray(p.cell_ids)
+            self._cell_inv = jnp.asarray(p.cell_inv)
+
+    # -- spec helpers ----------------------------------------------------
+    def _dev_specs(self):
+        specs = {
+            "nbr": P(self._r, None, None),
+            "send_up": P(self._r, None),
+            "send_dn": P(self._r, None),
+            "upd": P(self._r, None, None),
+            "cols": P(self._r, None),
+            "edge_e0": P(self._r, None),
+            "edge_e1": P(self._r, None),
+        }
+        if self.noise == "lfsr":
+            specs["lfsr_perm"] = P(self._r, None)
+        return specs
+
+    def _chip_specs(self):
+        return {"w": P(self._r, None, None),
+                **{k: P(self._r, None)
+                   for k in ("h", "gain", "off", "rg", "co")}}
+
+    def _shard_map(self, fn, in_specs, out_specs):
+        from repro.launch.mesh import shard_map as shard_map_compat
+        return shard_map_compat(fn, mesh=self.mesh, in_specs=in_specs,
+                                out_specs=out_specs, check_vma=False)
+
+    # -- global <-> parts layout ----------------------------------------
+    def _chip_parts(self, chip: EffectiveChip) -> dict:
+        if chip.nbr_w is None or chip.nbr_idx is None:
+            raise ValueError(
+                "sharded execution needs a chip carrying the slot layout "
+                "(program through the Session, or hardware.attach_sparse)")
+        ids = self._part_ids
+        return {
+            "w": jnp.moveaxis(chip.nbr_w[:, ids], 1, 0),
+            "h": chip.h[ids],
+            "gain": chip.tanh_gain[ids],
+            "off": chip.tanh_offset[ids],
+            "rg": chip.rand_gain[ids],
+            "co": chip.comp_offset[ids],
+        }
+
+    def _m_parts(self, m: jax.Array) -> jax.Array:
+        return jnp.moveaxis(jnp.take(m, self._part_ids, axis=1), 1, 0)
+
+    def _m_global(self, parts: jax.Array) -> jax.Array:
+        flat = jnp.moveaxis(parts, 0, 1).reshape(parts.shape[1], -1)
+        return jnp.take(flat, self._inv_ids, axis=1)
+
+    def _ns_parts(self, ns: jax.Array):
+        if self.noise == "lfsr":
+            return jnp.moveaxis(jnp.take(ns, self._cell_ids, axis=1), 1, 0)
+        return ns  # counter: replicated uint32[2]
+
+    def _ns_global(self, ns, parts):
+        if self.noise == "lfsr":
+            flat = jnp.moveaxis(parts, 0, 1).reshape(parts.shape[1], -1)
+            return jnp.take(flat, self._cell_inv, axis=1)
+        return parts
+
+    def _ns_spec(self):
+        return P(self._r, self._c, None) if self.noise == "lfsr" else P()
+
+    # -- device-local pieces --------------------------------------------
+    def _chain_offset(self):
+        """Global id of this device's first chain (uint32)."""
+        idx = jnp.uint32(0)
+        for ax in self.chain_axes:
+            idx = idx * jnp.uint32(self.mesh.shape[ax]) \
+                + jax.lax.axis_index(ax).astype(jnp.uint32)
+        return idx * jnp.uint32(self.b_loc)
+
+    def _noise_step(self, dev):
+        """Device-local step fn regenerating the *global* noise stream's
+        columns for this shard — bit-exact vs core/pbit's host noise."""
+        if self.noise == "counter":
+            cols = dev["cols"][0][None, :]
+
+            def step(st, chain0):
+                rows = chain0 + jnp.arange(self.b_loc, dtype=jnp.uint32)
+                u = lfsr_mod.counter_uniform(st[0], st[1], rows[:, None],
+                                             cols)
+                return st + jnp.array([0, 1], jnp.uint32), u
+            return step
+
+        perm = dev["lfsr_perm"][0]
+
+        def step(st, chain0):
+            st = lfsr_mod.lfsr_step_n(st, self.decimation)
+            u = jnp.take(lfsr_mod.flat_cell_uniforms(st), perm, axis=-1)
+            return st, u
+        return step
+
+    def _local_sweeps(self, clamped, collect, accumulate, hist_w):
+        """The per-device scan over sweeps.  Returns
+        run(dev, chip, m, ns, betas, measured?, cm?, cv?) -> mode outputs
+        — ``dev`` is the *sharded* plan-table argument shard_map hands
+        each device (never a closure capture, which would replicate
+        device 0's tables everywhere)."""
+        n_loc = self.plan.n_loc
+
+        def run(dev, chip, m, ns, betas, measured=None, cm=None, cv=None,
+                vis_idx=None, vis_w=None):
+            send_up, send_dn = dev["send_up"][0], dev["send_dn"][0]
+            nbr = dev["nbr"][0]
+
+            def exchange(m):
+                return halo_exchange(m, send_up, send_dn, self._row_name,
+                                     self.n_row)
+
+            nstep = self._noise_step(dev)
+            w, h = chip["w"][0], chip["h"][0]
+            gain, off = chip["gain"][0], chip["off"][0]
+            rg, co = chip["rg"][0], chip["co"][0]
+            chain0 = self._chain_offset()
+            masks = [dev["upd"][0, c] for c in (0, 1)]
+            if clamped:
+                masks = [mk & ~cm for mk in masks]
+
+            def sweep(carry, xs):
+                m, ns = carry[0], carry[1]
+                beta_t = xs[0]
+                if clamped and cv is not None:
+                    m = jnp.where(cm, cv, m)
+                for c in (0, 1):
+                    hu, hd = exchange(m)
+                    ns, u = nstep(ns, chain0)
+                    m = halo_half_sweep(m, hu, hd, nbr, w, h, gain, off,
+                                        rg, co, masks[c], beta_t, u)
+                out = None
+                if accumulate:
+                    w_t = xs[1]
+                    hu, hd = exchange(m)   # refresh for boundary edges
+                    m_ext = jnp.concatenate([m, hu, hd], axis=1)
+                    corr = m_ext[:, dev["edge_e0"][0]] \
+                        * m_ext[:, dev["edge_e1"][0]]
+                    s_acc, c_acc = carry[2], carry[3]
+                    if self.n_chain == 1:
+                        # dense-identical accumulation order (any B)
+                        s_acc = s_acc + w_t * jnp.mean(m, axis=0)
+                        c_acc = c_acc + w_t * jnp.mean(corr, axis=0)
+                    else:
+                        # raw ±1 sums; psum + one division at the end —
+                        # bit-exact vs dense for power-of-two chains
+                        s_acc = s_acc + w_t * jnp.sum(m, axis=0)
+                        c_acc = c_acc + w_t * jnp.sum(corr, axis=0)
+                    carry_out = (m, ns, s_acc, c_acc)
+                elif hist_w is not None:
+                    w_t = xs[1]
+                    bits = (jnp.take(m, vis_idx, axis=1) > 0).astype(
+                        jnp.int32)
+                    code = jnp.sum(bits * vis_w[None, :], axis=1)
+                    if self.n_row > 1:
+                        code = jax.lax.psum(code, self._row_name)
+                    hist = carry[2].at[code].add(w_t)
+                    carry_out = (m, ns, hist)
+                else:
+                    carry_out = (m, ns)
+                    if collect:
+                        out = m
+                return carry_out, out
+
+            xs = (betas,) if measured is None else (betas, measured)
+            if accumulate:
+                init = (m, ns, jnp.zeros((n_loc,), jnp.float32),
+                        jnp.zeros((dev["edge_e0"].shape[1],), jnp.float32))
+            elif hist_w is not None:
+                init = (m, ns, jnp.zeros((2 ** hist_w,), jnp.float32))
+            else:
+                init = (m, ns)
+            final, traj = jax.lax.scan(sweep, init, xs)
+            return final, traj
+
+        return run
+
+    # ------------------------------------------------------------------
+    # public impls (called inside the Session's jitted closures)
+    # ------------------------------------------------------------------
+    def sample(self, chip, m, ns, betas, cm=None, cv=None, collect=False):
+        clamped = cm is not None
+        has_cv = cv is not None
+        run = self._local_sweeps(clamped, collect, False, None)
+
+        def local(dev, chipp, m_p, ns_p, betas, *rest):
+            kw = {}
+            if clamped:
+                kw["cm"] = rest[0][0]
+                if has_cv:
+                    kw["cv"] = rest[1][0]
+            ns_l = ns_p[0] if self.noise == "lfsr" else ns_p
+            (m_o, ns_o, *_), traj = run(dev, chipp, m_p[0], ns_l, betas,
+                                        **kw)
+            outs = [m_o[None], self._ns_out(ns_o)]
+            if collect:
+                outs.append(traj[None])
+            return tuple(outs)
+
+        betas = jnp.asarray(betas, jnp.float32)
+        beta_spec = P() if betas.ndim == 1 else P(None, self._c)
+        in_specs = [self._dev_specs(), self._chip_specs(),
+                    P(self._r, self._c, None), self._ns_spec(), beta_spec]
+        args = [self._dev, self._chip_parts(chip), self._m_parts(m),
+                self._ns_parts(ns), betas]
+        if clamped:
+            in_specs.append(P(self._r, None))
+            args.append(self._part_cols(cm))
+            if has_cv:
+                in_specs.append(P(self._r, self._c, None))
+                args.append(self._m_parts(cv))
+        out_specs = [P(self._r, self._c, None), self._ns_spec()]
+        if collect:
+            out_specs.append(P(self._r, None, self._c, None))
+        out = self._shard_map(local, tuple(in_specs), tuple(out_specs))(
+            *args)
+        m_o = self._m_global(out[0])
+        ns_o = self._ns_global(ns, out[1])
+        traj = None
+        if collect:
+            t = jnp.moveaxis(out[2], 0, 2)          # (S, B, n_row, n_loc)
+            t = t.reshape(t.shape[0], t.shape[1], -1)
+            traj = jnp.take(t, self._inv_ids, axis=2)
+        return m_o, ns_o, traj
+
+    def stats(self, chip, m, ns, beta, n_sweeps, burn_in, cm=None, cv=None):
+        clamped = cm is not None
+        has_cv = cv is not None
+        run = self._local_sweeps(clamped, False, True, None)
+        betas = jnp.full((n_sweeps,), beta, jnp.float32)
+        measured = (jnp.arange(n_sweeps) >= burn_in).astype(jnp.float32)
+        denom = jnp.maximum(n_sweeps - burn_in, 1).astype(jnp.float32)
+
+        def local(dev, chipp, m_p, ns_p, betas, measured, *rest):
+            kw = {}
+            if clamped:
+                kw["cm"] = rest[0][0]
+                if has_cv:
+                    kw["cv"] = rest[1][0]
+            ns_l = ns_p[0] if self.noise == "lfsr" else ns_p
+            (m_o, ns_o, s_acc, c_acc), _ = run(dev, chipp, m_p[0], ns_l,
+                                               betas, measured, **kw)
+            if self.n_chain > 1:
+                s_acc = jax.lax.psum(s_acc, self._chain_name)
+                c_acc = jax.lax.psum(c_acc, self._chain_name)
+            return m_o[None], self._ns_out(ns_o), s_acc[None], c_acc[None]
+
+        in_specs = [self._dev_specs(), self._chip_specs(),
+                    P(self._r, self._c, None), self._ns_spec(), P(), P()]
+        args = [self._dev, self._chip_parts(chip), self._m_parts(m),
+                self._ns_parts(ns), betas, measured]
+        if clamped:
+            in_specs.append(P(self._r, None))
+            args.append(self._part_cols(cm))
+            if has_cv:
+                in_specs.append(P(self._r, self._c, None))
+                args.append(self._m_parts(cv))
+        out_specs = (P(self._r, self._c, None), self._ns_spec(),
+                     P(self._r, None), P(self._r, None))
+        m_o, ns_o, s_p, c_p = self._shard_map(
+            local, tuple(in_specs), out_specs)(*args)
+        scale = denom if self.n_chain == 1 else denom * self.chains
+        s = jnp.take(s_p.reshape(-1), self._inv_ids) / scale
+        c = jnp.take(c_p.reshape(-1), self._edge_inv) / scale
+        return s, c, self._m_global(m_o), self._ns_global(ns, ns_o)
+
+    def visible_hist(self, chip, m, ns, betas, burn_in, visible_idx):
+        visible_idx = np.asarray(visible_idx)
+        nv = int(visible_idx.shape[0])
+        p = self.plan
+        vi = np.zeros((p.n_shards, nv), np.int32)
+        vw = np.zeros((p.n_shards, nv), np.int32)
+        owner = np.searchsorted(p.node_starts[1:], visible_idx,
+                                side="right")
+        for k, (v, d) in enumerate(zip(visible_idx, owner)):
+            vi[d, k] = v - p.node_starts[d]
+            vw[d, k] = 2 ** k
+        vi_j, vw_j = jnp.asarray(vi), jnp.asarray(vw)
+        run = self._local_sweeps(False, False, False, nv)
+        betas = jnp.asarray(betas, jnp.float32)
+        n_sweeps = betas.shape[0]
+        measured = (jnp.arange(n_sweeps) >= burn_in).astype(jnp.float32)
+
+        def local(dev, chipp, m_p, ns_p, betas, measured, vi_p, vw_p):
+            ns_l = ns_p[0] if self.noise == "lfsr" else ns_p
+            (m_o, ns_o, hist), _ = run(dev, chipp, m_p[0], ns_l, betas,
+                                       measured, vis_idx=vi_p[0],
+                                       vis_w=vw_p[0])
+            if self.n_chain > 1:
+                hist = jax.lax.psum(hist, self._chain_name)
+            return m_o[None], self._ns_out(ns_o), hist
+
+        beta_spec = P() if betas.ndim == 1 else P(None, self._c)
+        in_specs = (self._dev_specs(), self._chip_specs(),
+                    P(self._r, self._c, None), self._ns_spec(), beta_spec,
+                    P(), P(self._r, None), P(self._r, None))
+        out_specs = (P(self._r, self._c, None), self._ns_spec(), P())
+        m_o, ns_o, hist = self._shard_map(local, in_specs, out_specs)(
+            self._dev, self._chip_parts(chip), self._m_parts(m),
+            self._ns_parts(ns), betas, measured, vi_j, vw_j)
+        return hist, self._m_global(m_o), self._ns_global(ns, ns_o)
+
+    # -- small helpers ---------------------------------------------------
+    def _part_cols(self, x):
+        """(N,) node vector -> (n_shards, n_loc)."""
+        return jnp.take(x, self._part_ids, axis=0)
+
+    def _ns_out(self, ns_local):
+        return ns_local[None] if self.noise == "lfsr" else ns_local
+
+
+# ---------------------------------------------------------------------------
+# Pod-scale SK lattices (SoA instance generator + Session-backed anneal)
+# ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class LatticeSpec:
     cell_rows: int
@@ -52,22 +620,11 @@ class LatticeSpec:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
-class LatticeState:
-    m_v: jax.Array
-    m_h: jax.Array
-
-    def tree_flatten(self):
-        return (self.m_v, self.m_h), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, ch):
-        return cls(*ch)
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
 class LatticeChip:
-    """Effective (post-mismatch) lattice couplings + neuron params."""
+    """SK-lattice couplings + neuron params, structure-of-arrays (O(N)).
+
+    This is the *instance description*; `lattice_to_chip` converts it
+    into the shared `EffectiveChip` slot layout the backends sample."""
     W_vh: jax.Array
     W_hv: jax.Array
     Wv_dn: jax.Array
@@ -130,126 +687,62 @@ def make_sk_lattice(spec: LatticeSpec, key: jax.Array,
     )
 
 
-# ---------------------------------------------------------------------------
-# Halo exchange
-# ---------------------------------------------------------------------------
-def _shift_rows(x: jax.Array, direction: int, axis_name: str | None,
-                n_shards: int) -> jax.Array:
-    """Neighbor-row view of x along the cell-row dim (dim 0).
+def lattice_to_chip(spec: LatticeSpec, lat: LatticeChip,
+                    graph: ChimeraGraph | None = None,
+                    tables=None) -> EffectiveChip:
+    """SoA lattice arrays -> the shared `EffectiveChip` slot layout.
 
-    direction=+1: returns x_up  s.t. x_up[r] = x[r-1] (row from above),
-    direction=-1: returns x_dn  s.t. x_dn[r] = x[r+1].
-    Edge rows receive zeros (open boundary).  Cross-device rows travel by
-    ppermute along `axis_name` when the grid is sharded.
+    Directional: ``nbr_w[d, i] = W[i, nbr_idx[d, i]]`` (current INTO node
+    i), so the converted chip samples the identical physics as the old
+    SoA update loop — tests/test_lattice.py checks it against the dense
+    reconstruction bit for bit.  O(D·N); no dense matrix anywhere.  The
+    lattice's dtype carries through (dryrun's --pbit-dtype knob).
     """
-    if direction == +1:
-        local = jnp.concatenate([jnp.zeros_like(x[:1]), x[:-1]], axis=0)
-        boundary = x[-1:]  # my last row is my down-neighbor's halo
-        perm_src_dst = [(i, i + 1) for i in range(n_shards - 1)]
-        recv_into_first = True
+    g = graph if graph is not None else make_chimera(
+        spec.cell_rows, spec.cell_cols, spec.k)
+    if tables is None:
+        nbr_idx, _ = g.neighbor_table()
+        slot_ij, slot_ji = g.edge_slots(nbr_idx)
     else:
-        local = jnp.concatenate([x[1:], jnp.zeros_like(x[:1])], axis=0)
-        boundary = x[:1]
-        perm_src_dst = [(i + 1, i) for i in range(n_shards - 1)]
-        recv_into_first = False
-    if axis_name is None or n_shards == 1:
-        return local
-    halo = jax.lax.ppermute(boundary, axis_name, perm_src_dst)
-    if recv_into_first:
-        return local.at[:1].set(halo)
-    return local.at[-1:].set(halo)
+        nbr_idx, slot_ij, slot_ji = tables
+    dtype = lat.W_vh.dtype
+    r_, c_, s_, k_ = g.node_r, g.node_c, g.node_side, g.node_k
+    h = jnp.where(s_ == 0, lat.h_v[r_, c_, k_], lat.h_h[r_, c_, k_])
+    gain = jnp.where(s_ == 0, lat.gain_v[r_, c_, k_], lat.gain_h[r_, c_, k_])
+    off = jnp.where(s_ == 0, lat.off_v[r_, c_, k_], lat.off_h[r_, c_, k_])
+
+    e0, e1 = g.edges[:, 0], g.edges[:, 1]
+    r0, c0, k0 = r_[e0], c_[e0], k_[e0]
+    k1 = k_[e1]
+    incell = (r_[e1] == r0) & (c_[e1] == c0)
+    vert = (s_[e0] == 0) & (s_[e1] == 0)
+    # current INTO e0 from e1 / INTO e1 from e0 (see tests/test_lattice.py
+    # for the dense index conventions these reproduce)
+    w_in0 = jnp.where(
+        incell, lat.W_vh[r0, c0, k0, k1],
+        jnp.where(vert, lat.Wv_up[r0, c0, k0], lat.Wh_lt[r0, c0, k0]))
+    w_in1 = jnp.where(
+        incell, lat.W_hv[r0, c0, k1, k0],
+        jnp.where(vert, lat.Wv_dn[r0, c0, k0], lat.Wh_rt[r0, c0, k0]))
+    D = nbr_idx.shape[0]
+    nbr_w = (jnp.zeros((D, g.n_nodes), dtype)
+             .at[slot_ij, e0].set(w_in0)
+             .at[slot_ji, e1].set(w_in1))
+    ones = jnp.ones((g.n_nodes,), dtype)
+    return EffectiveChip(
+        W=None, h=h.astype(dtype), tanh_gain=gain.astype(dtype),
+        tanh_offset=off.astype(dtype), rand_gain=ones,
+        comp_offset=0.0 * ones, nbr_idx=jnp.asarray(nbr_idx, jnp.int32),
+        nbr_w=nbr_w)
 
 
-def _shift_cols(x: jax.Array, direction: int, axis_name: str | None,
-                n_shards: int) -> jax.Array:
-    xt = jnp.swapaxes(x, 0, 1)
-    out = _shift_rows(xt, direction, axis_name, n_shards)
-    return jnp.swapaxes(out, 0, 1)
-
-
-# ---------------------------------------------------------------------------
-# Physics
-# ---------------------------------------------------------------------------
-def _neuron(I, gain, off, beta, u):
-    """I, u: (B, R, C, k); gain/off broadcast over the chain dim."""
-    return jnp.where(jnp.tanh(beta * gain * (I + off)) + u >= 0.0, 1.0, -1.0)
-
-
-def lattice_half_sweep(
-    state: LatticeState,
-    chip: LatticeChip,
-    color: int,
-    beta: jax.Array,
-    u_v: jax.Array,
-    u_h: jax.Array,
-    parity: jax.Array,          # (R, C) global (r+c) % 2 of each local cell
-    row_axis: str | None, n_row: int,
-    col_axis: str | None, n_col: int,
-) -> LatticeState:
-    # spins are (B, R, C, k): chain-batched; the halo helpers shift the
-    # cell-row/col dims (now dims 1/2), so transpose through them
-    m_v, m_h = state.m_v, state.m_h
-
-    def rows(x, d):   # shift the cell-row dim (axis 1 of (B, R, C, k))
-        return jnp.moveaxis(
-            _shift_rows(jnp.moveaxis(x, 1, 0), d, row_axis, n_row), 0, 1)
-
-    def cols(x, d):   # shift the cell-col dim (axis 2 of (B, R, C, k))
-        return jnp.moveaxis(
-            _shift_rows(jnp.moveaxis(x, 2, 0), d, col_axis, n_col), 0, 2)
-
-    # -- vertical nodes of parity==color cells -------------------------
-    mv_up = rows(m_v, +1)                            # spin of (r-1, c)
-    wv_up = _shift_rows(chip.Wv_dn, +1, row_axis, n_row)  # its coupler
-    I_v = (
-        jnp.einsum("rcij,brcj->brci", chip.W_vh, m_h)
-        + wv_up * mv_up
-        + chip.Wv_up * rows(m_v, -1)
-        + chip.h_v
-    )
-    new_v = _neuron(I_v, chip.gain_v, chip.off_v, beta, u_v)
-    upd_v = (parity == color)[..., None]
-    m_v = jnp.where(upd_v, new_v, m_v).astype(m_v.dtype)
-
-    # -- horizontal nodes of parity==(1-color) cells --------------------
-    mh_lt = cols(m_h, +1)
-    wh_lt = _shift_cols(chip.Wh_rt, +1, col_axis, n_col)
-    I_h = (
-        jnp.einsum("rcij,brcj->brci", chip.W_hv, m_v)
-        + wh_lt * mh_lt
-        + chip.Wh_lt * cols(m_h, -1)
-        + chip.h_h
-    )
-    new_h = _neuron(I_h, chip.gain_h, chip.off_h, beta, u_h)
-    upd_h = (parity == (1 - color))[..., None]
-    m_h = jnp.where(upd_h, new_h, m_h).astype(m_h.dtype)
-    return LatticeState(m_v, m_h)
-
-
-def lattice_energy(state: LatticeState, chip: LatticeChip,
-                   row_axis: str | None, n_row: int,
-                   col_axis: str | None, n_col: int) -> jax.Array:
-    """Global Ising energy (symmetrized couplings), psum over the mesh."""
-    W_sym = 0.5 * (chip.W_vh + jnp.swapaxes(chip.W_hv, -1, -2))
-    e_cell = -jnp.einsum("brci,rcij,brcj->b", state.m_v, W_sym, state.m_h)
-    wv = 0.5 * (chip.Wv_dn + chip.Wv_up)
-    mv_dn = jnp.moveaxis(
-        _shift_rows(jnp.moveaxis(state.m_v, 1, 0), -1, row_axis, n_row),
-        0, 1)
-    e_vert = -jnp.sum(wv * state.m_v * mv_dn, axis=(1, 2, 3))
-    wh = 0.5 * (chip.Wh_rt + chip.Wh_lt)
-    mh_rt = jnp.moveaxis(
-        _shift_rows(jnp.moveaxis(state.m_h, 2, 0), -1, col_axis, n_col),
-        0, 2)
-    e_horiz = -jnp.sum(wh * state.m_h * mh_rt, axis=(1, 2, 3))
-    e_bias = -jnp.sum(chip.h_v * state.m_v, axis=(1, 2, 3)) - \
-        jnp.sum(chip.h_h * state.m_h, axis=(1, 2, 3))
-    e = e_cell + e_vert + e_horiz + e_bias
-    if row_axis is not None:
-        e = jax.lax.psum(e, row_axis)
-    if col_axis is not None:
-        e = jax.lax.psum(e, col_axis)
-    return e
+def sparse_energy(chip: EffectiveChip, m: jax.Array) -> jax.Array:
+    """Symmetrized Ising energy per chain from the slot layout, O(B·N·D):
+    E = -1/2 Σ_i m_i Σ_j W_ij m_j - Σ_i h_i m_i (directional W averaged
+    over its two directions, exactly the old `lattice_energy`)."""
+    I = sparse_neuron_input(m, chip.nbr_idx, chip.nbr_w,
+                            jnp.float32(0.0))
+    return -0.5 * jnp.sum(m * I, axis=1) - m @ chip.h
 
 
 def make_lattice_anneal(
@@ -261,80 +754,55 @@ def make_lattice_anneal(
     n_sweeps: int = 100,
     record_every: int = 10,
 ):
-    """Build the (optionally shard_map-distributed) annealing step.
+    """Build the (optionally mesh-sharded) annealing step over the shared
+    engine: cell rows partition over ``row_axes`` with ppermute halo
+    exchange, exactly like every other sharded `api.Session` workload
+    (the old private SoA update loop is retired; ``col_axes`` is accepted
+    for signature compatibility — the spatial cut is 1-D over cell rows).
 
-    Returns fn(chip_sharded, key, betas) -> (final_state, energies).
-    With mesh=None runs single-device (used by unit tests).
+    Returns jitted run(lattice_chip, key, betas) ->
+    (final_m (chains, N), energies (n_sweeps // record_every,)).
     """
-    R, C = spec.cell_rows, spec.cell_cols
+    from repro import api
 
-    if mesh is not None:
-        row_axis = row_axes[0] if len(row_axes) == 1 else row_axes
-        col_axis = col_axes[0] if len(col_axes) == 1 else col_axes
-        n_row = int(np.prod([mesh.shape[a] for a in row_axes]))
-        n_col = int(np.prod([mesh.shape[a] for a in col_axes]))
-    else:
-        row_axis = col_axis = None
-        n_row = n_col = 1
-    tr, tc = R // n_row, C // n_col
+    if n_sweeps % record_every:
+        raise ValueError(f"n_sweeps={n_sweeps} must be a multiple of "
+                         f"record_every={record_every}")
+    del col_axes
+    g = make_chimera(spec.cell_rows, spec.cell_cols, spec.k)
+    nbr_idx, _ = g.neighbor_table()
+    tables = (nbr_idx, *g.edge_slots(nbr_idx))
+    from repro.core.hardware import sample_mismatch_sparse
+    sp = api.SamplerSpec(
+        graph=g, hw=HardwareConfig.ideal(),
+        mismatch=sample_mismatch_sparse(jax.random.PRNGKey(0), g.n_nodes,
+                                        nbr_idx.shape[0],
+                                        HardwareConfig.ideal()),
+        noise="counter", backend="sparse", chains=spec.chains,
+        beta=spec.beta, mesh=mesh,
+        partition=(api.Partition(rows=row_axes) if mesh is not None
+                   else None))
+    session = api.Session(sp)
+    n_rec = n_sweeps // record_every
 
-    def local_run(chip: LatticeChip, key: jax.Array, betas: jax.Array):
-        if row_axis is not None:
-            ri = jax.lax.axis_index(row_axis)
-            ci = jax.lax.axis_index(col_axis)
-        else:
-            ri = ci = 0
-        key = jax.random.fold_in(key, ri * 65536 + ci)
-        gr = ri * tr + jnp.arange(tr)[:, None]
-        gc = ci * tc + jnp.arange(tc)[None, :]
-        parity = (gr + gc) % 2
+    from repro.core import pbit
 
-        k0, k1 = jax.random.split(key)
-        B = spec.chains
-        m_v = jnp.where(
-            jax.random.bernoulli(k0, 0.5, (B, tr, tc, spec.k)), 1.0, -1.0)
-        m_h = jnp.where(
-            jax.random.bernoulli(k1, 0.5, (B, tr, tc, spec.k)), 1.0, -1.0)
-        state = LatticeState(m_v.astype(jnp.float32),
-                             m_h.astype(jnp.float32))
+    def run(lat: LatticeChip, key: jax.Array, betas: jax.Array):
+        chip = lattice_to_chip(spec, lat, g, tables)
+        k1, k2 = jax.random.split(key)
+        m = pbit.random_spins(k1, spec.chains, g.n_nodes)
+        ns = session.noise_state(k2)
+        segs = betas[:n_rec * record_every].reshape(n_rec, record_every)
 
-        def sweep(carry, inp):
-            st, k = carry
-            beta, rec = inp
-            for color in (0, 1):
-                k, ku = jax.random.split(k)
-                us = jax.random.uniform(ku, (2, B, tr, tc, spec.k),
-                                        minval=-1.0, maxval=1.0)
-                st = lattice_half_sweep(
-                    st, chip, color, beta, us[0], us[1], parity,
-                    row_axis, n_row, col_axis, n_col)
-            e = jnp.where(
-                rec,
-                lattice_energy(st, chip, row_axis, n_row, col_axis,
-                               n_col).mean(),
-                0.0)
-            return (st, k), e
+        def seg(carry, b):
+            m, ns = carry
+            m, ns, _ = session.sample(chip, m, ns, b)
+            return (m, ns), sparse_energy(chip, m).mean()
 
-        rec = (jnp.arange(n_sweeps) % record_every) == record_every - 1
-        (state, _), energies = jax.lax.scan(sweep, (state, key),
-                                            (betas, rec))
-        return state, energies
+        (m, ns), energies = jax.lax.scan(seg, (m, ns), segs)
+        return m, energies
 
-    if mesh is None:
-        return jax.jit(local_run)
-
-    chip_specs = LatticeChip(
-        *[P(row_axes, col_axes) for _ in range(12)])
-    out_specs = (LatticeState(P(row_axes, col_axes), P(row_axes, col_axes)),
-                 P())
-    from repro.launch.mesh import shard_map as shard_map_compat
-    fn = shard_map_compat(
-        local_run, mesh=mesh,
-        in_specs=(chip_specs, P(), P()),
-        out_specs=out_specs,
-        check_vma=False,
-    )
-    return jax.jit(fn)
+    return jax.jit(run)
 
 
 def lattice_input_sharding(mesh: Mesh, row_axes=("data",),

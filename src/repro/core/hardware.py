@@ -258,6 +258,33 @@ class SparseMismatch:
     def tree_unflatten(cls, aux: Any, children):
         return cls(*children)
 
+    @classmethod
+    def from_dense(cls, mism: "Mismatch", nbr_idx: jax.Array
+                   ) -> "SparseMismatch":
+        """Reproduce a *given* dense chip instance in the slot layout.
+
+        Gathers exactly the on-graph entries of the dense draw, so a
+        sparse-native machine built from this carries bit-identical
+        mismatch to the dense machine: programming the same codes yields
+        bit-identical ``nbr_w``, and the sparse backends then sample the
+        identical spin trajectory (asserted at chip scale in
+        tests/test_sparse.py::test_sparse_machine_reproduces_dense_chip).
+        The dense (N², N²·8) arrays exist only as the *input* — the
+        result is O(D·N), ready for lattice-scale sharded sampling.
+        """
+        idx = jnp.asarray(nbr_idx)
+        rows = jnp.arange(mism.tanh_gain.shape[0])[None, :]
+        return cls(
+            dac_bit_j=mism.dac_bit_j[rows, idx],
+            dac_bit_h=mism.dac_bit_h,
+            edge_gain=mism.edge_gain[rows, idx],
+            tanh_gain=mism.tanh_gain,
+            tanh_offset=mism.tanh_offset,
+            rand_gain=mism.rand_gain,
+            comp_offset=mism.comp_offset,
+            leak=mism.leak[rows, idx],
+        )
+
 
 def sample_mismatch_sparse(
     key: jax.Array, n_nodes: int, degree: int, cfg: HardwareConfig
@@ -284,19 +311,10 @@ def sample_mismatch_sparse(
 
 
 def gather_mismatch(mism: Mismatch, nbr_idx: jax.Array) -> SparseMismatch:
-    """Dense (N, N) mismatch -> (D, N) slot layout (for parity tests)."""
-    idx = jnp.asarray(nbr_idx)
-    rows = jnp.arange(mism.tanh_gain.shape[0])[None, :]
-    return SparseMismatch(
-        dac_bit_j=mism.dac_bit_j[rows, idx],
-        dac_bit_h=mism.dac_bit_h,
-        edge_gain=mism.edge_gain[rows, idx],
-        tanh_gain=mism.tanh_gain,
-        tanh_offset=mism.tanh_offset,
-        rand_gain=mism.rand_gain,
-        comp_offset=mism.comp_offset,
-        leak=mism.leak[rows, idx],
-    )
+    """Dense (N, N) mismatch -> (D, N) slot layout.
+
+    Alias of `SparseMismatch.from_dense` (kept for existing call sites)."""
+    return SparseMismatch.from_dense(mism, nbr_idx)
 
 
 def program_weights_sparse(

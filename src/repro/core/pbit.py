@@ -40,6 +40,16 @@ This module is the *engine* layer.  Workload code builds samplers through
 resolves backend/interpret/noise/schedule once and calls in here with
 everything explicit; the free functions keep their legacy env-consulting
 defaults as deprecation shims (docs/api.md has the migration table).
+
+Multi-device execution sits one layer up: a spec carrying ``mesh=`` +
+``partition=`` compiles into `core/distributed.ShardedEngine`, which runs
+the "sparse" slot-layout scan per device shard with ppermute halo
+exchange of the chain-coupler boundary spins (docs/sharding.md).  The
+noise sources here are the single-device references the sharded engine
+must match bit for bit: "counter" regenerates from the global
+(chain, node) coordinate hash and "lfsr" from the per-cell register
+band, so any shard can reproduce exactly its columns of the global
+stream — which is why sharded specs require one of those two kinds.
 """
 from __future__ import annotations
 

@@ -1,10 +1,10 @@
 """Pallas TPU kernel: chain-batched Chimera-lattice half-sweep (SoA layout).
 
-This is the per-device compute hot-spot of the pod-scale p-bit lattice
-(core/distributed.py): for every cell, the in-cell K44 coupling (4x4),
-the vertical/horizontal inter-cell couplers, bias, tanh neuron and
-comparator — fused over a (chains, rows, cols, 4) tile so spins, noise and
-couplings stream through VMEM exactly once per half-sweep.
+A standalone VPU kernel for the structure-of-arrays cell layout: for every
+cell, the in-cell K44 coupling (4x4), the vertical/horizontal inter-cell
+couplers, bias, tanh neuron and comparator — fused over a
+(chains, rows, cols, 4) tile so spins, noise and couplings stream through
+VMEM exactly once per half-sweep.
 
 Layout choice (TPU-native): the trailing two dims are (cols*4) flattened to
 a multiple of 128 lanes; chains ride the sublane dim.  The 4x4 cell einsum
@@ -13,10 +13,13 @@ waste the 128x128 systolic array), so the kernel is pure VPU — matching the
 chip, where the synapse is analog current summation, not a MAC array.
 
 Halo handling: the caller passes spin planes already extended with their
-neighbor rows/cols (distributed.py's ppermute halo exchange), so the kernel
-body is boundary-free.
+neighbor rows/cols, so the kernel body is boundary-free.  Its original SoA
+driver in core/distributed.py is retired (the sharded path runs the slot
+layout, kernels/shard_sweep.py + docs/sharding.md); this kernel is the
+starting point for the ROADMAP's sweep-resident *sharded* follow-on, where
+the interior/boundary split lets S local sweeps fuse per launch.
 
-Oracle: kernels/ref.py::lattice_half_sweep_ref; swept in
+Oracle: kernels/ref.py::lattice_vertical_update_ref; swept in
 tests/test_kernels.py::test_lattice_kernel_*.
 """
 from __future__ import annotations

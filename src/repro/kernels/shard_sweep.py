@@ -1,0 +1,91 @@
+"""Device-local compute for the mesh-sharded sparse lattice.
+
+The sharded execution layer (core/distributed.ShardedEngine) cuts the
+Chimera cell grid into contiguous *row bands*, one per device along the
+partition's rows axis.  Each device owns a padded (B, N_loc) spin block
+plus the (D, N_loc) slice of the slot tables; the only non-local spins a
+half-sweep ever reads are the chain-coupler boundary spins of the two row
+neighbors — the ``halo_up`` / ``halo_dn`` blocks exchanged by
+``jax.lax.ppermute`` in `halo_exchange`.
+
+`halo_half_sweep` is `kernels/ref.py::pbit_sparse_half_sweep_ref` with the
+gather source extended from the local block to [local | halo_up | halo_dn]:
+slots accumulate in the identical ascending-d order and every elementwise
+op matches term for term, so a sharded sweep is *bit-exact* against the
+single-device sparse scan (and therefore against the dense ref) for the
+same noise stream — the contract tests/test_shard_session.py enforces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def halo_exchange(
+    m_loc: jax.Array,
+    send_up: jax.Array,
+    send_dn: jax.Array,
+    axis_name,
+    n_shards: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Exchange boundary spins with the row neighbors.
+
+    m_loc: (B, N_loc) local spins; send_up/send_dn: (H,) local indices of
+    the vertical nodes in the band's first/last cell row (padded with 0 —
+    padding halo slots are never referenced by any neighbor table entry).
+    Returns (halo_up, halo_dn), each (B, H): the down-boundary of the
+    device above and the up-boundary of the device below.  Edge devices
+    receive zeros (open lattice boundary, matching the dense path where
+    those couplers simply do not exist).  O(B·H) bytes per device pair —
+    the O(√N) inter-cell wires of the chip, nothing else ever moves.
+    """
+    up_src = jnp.take(m_loc, send_dn, axis=1)  # my last row -> device below
+    dn_src = jnp.take(m_loc, send_up, axis=1)  # my first row -> device above
+    if axis_name is None or n_shards <= 1:
+        return jnp.zeros_like(up_src), jnp.zeros_like(dn_src)
+    halo_up = jax.lax.ppermute(
+        up_src, axis_name, [(i, i + 1) for i in range(n_shards - 1)])
+    halo_dn = jax.lax.ppermute(
+        dn_src, axis_name, [(i + 1, i) for i in range(n_shards - 1)])
+    return halo_up, halo_dn
+
+
+def halo_neuron_input(
+    m_loc: jax.Array,
+    halo_up: jax.Array,
+    halo_dn: jax.Array,
+    nbr_idx: jax.Array,
+    nbr_w: jax.Array,
+    h: jax.Array,
+) -> jax.Array:
+    """Eqn 1 on the local slot tables: I = Σ_d w_d ⊙ m_ext[:, idx_d] + h.
+
+    nbr_idx: (D, N_loc) indices into the *extended* array
+    [local | halo_up | halo_dn]; nbr_w: (D, N_loc) local slot weights.
+    Ascending-d accumulation, zero init, ``+ h`` last — the exact op
+    order of `kernels/ref.py::sparse_neuron_input`, which is what keeps
+    the sharded path bit-exact vs the single-device backends.
+    """
+    m_ext = jnp.concatenate([m_loc, halo_up, halo_dn], axis=1)
+    D = nbr_idx.shape[0]
+    acc = jnp.zeros(m_loc.shape, jnp.float32)
+    for d in range(D):
+        acc = acc + nbr_w[d][None, :] * jnp.take(m_ext, nbr_idx[d], axis=1)
+    return acc + h
+
+
+def halo_half_sweep(m_loc, halo_up, halo_dn, nbr_idx, nbr_w, h, gain, off,
+                    rand_gain, comp_off, update_mask, beta, u):
+    """`pbit_sparse_half_sweep_ref` with the halo-extended gather source.
+
+    m_loc/u: (B, N_loc); update_mask: (N_loc,) bool (padding lanes False);
+    beta: scalar or (B,) per-chain inverse temperature.
+    """
+    beta = jnp.asarray(beta, jnp.float32)
+    if beta.ndim == 1:
+        beta = beta[:, None]
+    I = halo_neuron_input(m_loc, halo_up, halo_dn, nbr_idx, nbr_w, h)
+    act = jnp.tanh(beta * gain * (I + off))
+    decision = act + rand_gain * u + comp_off
+    new = jnp.where(decision >= 0.0, 1.0, -1.0).astype(m_loc.dtype)
+    return jnp.where(update_mask, new, m_loc)

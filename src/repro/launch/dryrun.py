@@ -144,7 +144,9 @@ def run_pbit(name: str, multi_pod: bool, out_dir: Path,
     spec = LatticeSpec(spec_d["cell_rows"], spec_d["cell_cols"],
                        chains=chains)
     mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
-    row_axes = ("pod", "data") if multi_pod else ("data",)
+    # the spatial cut is 1-D over cell rows (docs/sharding.md): use every
+    # mesh axis so all chips hold a row band (512 rows >= 512 chips)
+    row_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     rec = {"arch": name, "shape": "anneal_1k_sweeps", "mesh": mesh_tag,
            "n_spins": spec.n_spins, "chains": chains, "dtype": dtype}
     t0 = time.time()

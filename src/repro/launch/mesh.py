@@ -60,6 +60,25 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     return _mesh((data, model), ("data", "model"))
 
 
+def make_line_mesh(n: int | None = None, axis: str = "data") -> Mesh:
+    """1-D mesh over n local devices — the shape the sharded p-bit
+    lattice wants (cell rows partition over one axis; see
+    docs/sharding.md).  n=None uses every local device."""
+    n = len(jax.devices()) if n is None else n
+    return _mesh((n,), (axis,))
+
+
+def halo_vs_hbm_seconds(halo_bytes: int, hbm_bytes: int) -> dict:
+    """Napkin math for one sharded sweep (docs/sharding.md): time on the
+    ICI link moving the halo vs time streaming the local state+weights
+    from HBM.  Ratio << 1 means the halo exchange hides entirely behind
+    the local half-sweep — the regime the O(√N) boundary guarantees."""
+    t_ici = halo_bytes / ICI_BW
+    t_hbm = hbm_bytes / HBM_BW
+    return {"ici_s": t_ici, "hbm_s": t_hbm,
+            "ici_over_hbm": t_ici / max(t_hbm, 1e-30)}
+
+
 def n_chips(mesh: Mesh) -> int:
     out = 1
     for v in mesh.shape.values():
