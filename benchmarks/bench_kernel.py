@@ -22,6 +22,13 @@ Reported per configuration:
     sweep from the partition plan and the TPU ICI-vs-HBM napkin ratio
     (docs/sharding.md).  Never run concurrently with the test suite on
     a small box — timings distort.
+  * `sync_policies` (N = 440, 2048; k in {1, 4, inf}): the first-class
+    `api.Sync` policies on a forced 2-device host — measured us/sweep
+    for the per-sweep-launch baseline (one 1-sweep Session call per
+    sweep, the serving/record loop's shape), the same barrier policy as
+    one resident S-sweep call, and the relaxed k=4 / launch-resident
+    policies — plus each policy's modeled halo bytes per sweep
+    (docs/sharding.md §Sync policies).
 
 Usage: python benchmarks/bench_kernel.py [--quick]
 """
@@ -313,6 +320,144 @@ def bench_sharded_sweep(quick: bool = False) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# sync policies: barrier vs relaxed halo exchange on 2 forced host devices
+# ---------------------------------------------------------------------------
+_SYNC_WORKER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import json, math, time
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro import api
+    from repro.core.cd import PBitMachine
+    from repro.core.chimera import make_chimera, make_chip_graph
+    from repro.core.hardware import HardwareConfig
+
+    POLICIES = {{
+        "1": api.Sync(),
+        "4": api.Sync(halo_every=4, sweeps_per_launch=4),
+        "inf": api.Sync(halo_every=math.inf, sweeps_per_launch=8),
+    }}
+
+    def time_calls(fn, m, ns, reps=5):
+        jax.block_until_ready(fn(m, ns))         # compile + warm
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(m, ns))
+            ts.append(time.perf_counter() - t0)
+        # median of fresh-input calls: chaining un-consumed sharded
+        # outputs back as inputs stalls the forced-host runtime for
+        # ~100 ms/call and would swamp the policy signal
+        return sorted(ts)[len(ts) // 2]
+
+    rows = []
+    for N, B, S in {configs}:
+        g = make_chip_graph() if N == 440 else \\
+            make_chimera(int(round((N / 8) ** 0.5)),
+                         int(round((N / 8) ** 0.5)))
+        mesh = jax.make_mesh((2,), ("data",))
+        rng = np.random.default_rng(N)
+        codes = jnp.asarray(rng.integers(-60, 60, g.n_edges), jnp.int32)
+        h0 = jnp.zeros((g.n_nodes,), jnp.int32)
+        for kname, sync in POLICIES.items():
+            mach = PBitMachine.create(g, jax.random.PRNGKey(0),
+                                      HardwareConfig.ideal(), sparse=True,
+                                      noise="counter", mesh=mesh,
+                                      partition=api.Partition(rows="data"),
+                                      sync=sync)
+            ses = mach.session(chains=B)
+            chip = ses.program_edges(codes, h0)
+            st = ses.init_state(jax.random.PRNGKey(1))
+            betas = jnp.full((S,), 0.7, jnp.float32)
+            t_call = time_calls(
+                lambda m, ns: ses.sample(chip, m, ns, betas)[0],
+                st.m, st.noise_state)
+            row = {{"N": N, "halo_every": kname,
+                    "sweeps_per_launch": sync.sweeps_per_launch,
+                    "mode": sync.mode,
+                    "cpu_us_per_sweep": t_call / S * 1e6}}
+            if kname == "1":
+                # the per-sweep-launch baseline: one 1-sweep Session call
+                # per sweep, blocking on each result — the dispatch shape
+                # of a serving / record loop that consumes every sweep,
+                # which is exactly what the sweep-resident policies
+                # amortize away
+                beta1 = jnp.full((1,), 0.7, jnp.float32)
+
+                def per_sweep(m, ns):
+                    for _ in range(S):
+                        m, ns, _ = ses.sample(chip, m, ns, beta1)
+                        jax.block_until_ready(m)
+                    return m
+                t_ps = time_calls(per_sweep, st.m, st.noise_state)
+                row["cpu_us_per_sweep_launch_baseline"] = t_ps / S * 1e6
+            rows.append(row)
+    print(json.dumps(rows))
+""")
+
+
+def bench_sync_policies(quick: bool = False) -> dict:
+    """The `sync_policies` section: for N = 440 / 2048 and halo_every
+    k in {1, 4, inf}, the modeled halo bytes per sweep under each policy
+    and the measured 2-forced-host-device sweep times — the per-sweep-
+    launch barrier baseline vs resident multi-sweep calls (the k=1
+    resident call isolates dispatch amortization; the relaxed rows add
+    the exchange savings).  Quick mode measures N=440 only."""
+    import math as _math
+
+    from repro import api
+    from repro.core.distributed import halo_bytes_per_sweep, \
+        plan_row_partition
+
+    policies = {
+        "1": api.Sync(),
+        "4": api.Sync(halo_every=4, sweeps_per_launch=4),
+        "inf": api.Sync(halo_every=_math.inf, sweeps_per_launch=8),
+    }
+    shapes = {440: (64, 16), 2048: (16, 16)}
+    if quick:
+        shapes = {440: (16, 8), 2048: (8, 8)}
+    rows = []
+    for N, (B, S) in shapes.items():
+        g = _chimera_for(N)
+        plan = plan_row_partition(g, 2)
+        for kname, sync in policies.items():
+            rows.append({
+                "N": N, "B": B, "S": S, "n_devices": 2,
+                "halo_every": kname,
+                "sweeps_per_launch": sync.sweeps_per_launch,
+                "mode": sync.mode,
+                "exchanges_per_sweep": sync.exchanges_per_sweep(),
+                "halo_bytes_per_sweep": halo_bytes_per_sweep(
+                    plan, B, sync=sync),
+            })
+
+    measured = [(N, *shapes[N]) for N in shapes if not quick or N == 440]
+    out = subprocess.run(
+        [sys.executable, "-c", _SYNC_WORKER.format(configs=measured)],
+        capture_output=True, text=True, timeout=1200,
+        cwd=Path(__file__).resolve().parent.parent,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    timed = json.loads(out.stdout.strip().splitlines()[-1])
+    by_key = {(r["N"], r["halo_every"]): r for r in timed}
+    for row in rows:
+        t = by_key.get((row["N"], row["halo_every"]))
+        if t is not None:
+            row["cpu_us_per_sweep"] = t["cpu_us_per_sweep"]
+            if "cpu_us_per_sweep_launch_baseline" in t:
+                row["cpu_us_per_sweep_launch_baseline"] = \
+                    t["cpu_us_per_sweep_launch_baseline"]
+    return {"note": "api.Sync policies on a forced 2-device host: "
+                    "per-sweep-launch barrier baseline vs resident "
+                    "multi-sweep calls (docs/sharding.md §Sync policies)",
+            "configs": rows}
+
+
+# ---------------------------------------------------------------------------
 # dense vs Chimera-native block-sparse
 # ---------------------------------------------------------------------------
 def dense_vs_sparse_model(B: int, N: int, S: int,
@@ -425,6 +570,9 @@ def run(quick: bool = False) -> dict:
     # mesh-sharded sweep: 1 vs 2 forced host devices + halo-bytes model
     results["sharded_sweep"] = bench_sharded_sweep(quick)
 
+    # sync policies: barrier vs relaxed halo exchange, measured + modeled
+    results["sync_policies"] = bench_sync_policies(quick)
+
     chip = results["configs"][0]
     emit("kernel_session_dispatch_N440",
          results["session_dispatch"]["session_us_per_call"],
@@ -447,6 +595,13 @@ def run(quick: bool = False) -> dict:
          sh440["halo_bytes_per_sweep"],
          f"boundary={sh440['n_boundary_spins']} spins, "
          f"ici/hbm={sh440['tpu_ici_over_hbm']:.3f}")
+    sy = {r["halo_every"]: r for r in results["sync_policies"]["configs"]
+          if r["N"] == 440}
+    emit("kernel_sync_resident_N440", sy["inf"].get("cpu_us_per_sweep", 0),
+         f"per_sweep_launch_baseline="
+         f"{sy['1'].get('cpu_us_per_sweep_launch_baseline', 0):.0f}us, "
+         f"halo_bytes inf/k1={sy['inf']['halo_bytes_per_sweep']:.0f}/"
+         f"{sy['1']['halo_bytes_per_sweep']:.0f}")
 
     save_json("kernel_pbit_update", results)
     if not quick:

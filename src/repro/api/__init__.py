@@ -26,6 +26,7 @@ from repro.api.spec import (
     Partition,
     SamplerSpec,
     Schedule,
+    Sync,
     Tempered,
     dense_vmem_feasible,
     resolve_backend,
@@ -43,7 +44,7 @@ __all__ = [
     "BACKENDS", "FUSED_BACKENDS", "IN_KERNEL_NOISE", "NOISE_KINDS",
     "SPARSE_BACKENDS",
     "Schedule", "Constant", "Anneal", "Tempered",
-    "Partition", "SamplerSpec", "Session", "SessionState",
+    "Partition", "Sync", "SamplerSpec", "Session", "SessionState",
     "program", "program_edges", "program_master",
     "dense_vmem_feasible", "resolve_backend", "resolve_interpret",
 ]

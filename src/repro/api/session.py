@@ -152,13 +152,15 @@ class Session:
         self._noise_init, self._noise_step = self._make_noise()
         self._engine = None
         if spec.mesh is not None:
-            # multi-device execution: the partition plan + shard_map'd
-            # sweep live in core/distributed.ShardedEngine; the closures
-            # below delegate to it with identical array contracts
+            # multi-device execution: the partition plan, the sync-policy
+            # launch loop, and the shard_map'd sweep live in
+            # core/distributed.ShardedEngine; the closures below delegate
+            # to it with identical array contracts
             from repro.core.distributed import ShardedEngine
             self._engine = ShardedEngine(
                 g, spec.mesh, spec.partitioning(), spec.noise,
-                spec.decimation, spec.chains)
+                spec.decimation, spec.chains, sync=spec.sync_policy(),
+                backend=self.backend, interpret=self.interpret)
         self.default_betas = (
             None if spec.schedule is None
             else spec.schedule.betas(spec.chains))

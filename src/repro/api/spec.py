@@ -35,10 +35,17 @@ time) is a spec field, resolved exactly once at `Session` construction:
     bit-exact to the single-device path; a sharded Session reproduces
     the single-device spin trajectory exactly for the same noise stream
     (see docs/sharding.md).
+  * ``sync`` — a `Sync` policy for sharded execution: how often row
+    bands exchange halos (``halo_every``), barrier vs PASS-style async
+    double-buffering (``mode``), and how many sweeps fuse into one
+    device-local launch (``sweeps_per_launch``).  The default barrier
+    keeps the bit-exactness contract; relaxed policies are documented,
+    measured approximations (docs/sharding.md §Sync policies).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 from typing import Any
 
@@ -201,6 +208,98 @@ class Partition:
 
 
 # ---------------------------------------------------------------------------
+# Synchronization policy (sharded execution)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Sync:
+    """How often row-band shards synchronize — a compiled sampler property.
+
+    The chip's analog fabric has no global clock (PASS, arXiv:2409.10325,
+    makes asynchrony the headline feature of a p-bit processor); how
+    faithfully the sharded engine emulates a global barrier is a policy,
+    not an accident of the backend:
+
+    * ``halo_every=k`` — exchange the chain-coupler boundary spins before
+      every k-th half-sweep (within-launch index; a launch boundary always
+      refreshes).  ``k=1`` (the default) is today's bit-exact barrier
+      path; ``k>1`` lets bands run on halos up to ``k-1`` half-sweeps
+      stale; ``math.inf`` exchanges only at launch boundaries.
+    * ``mode`` — ``"barrier"`` consumes each exchange immediately (the
+      deterministic emulation of a synchronized swap); ``"async"``
+      double-buffers it PASS-style: the values consumed at exchange point
+      t are the ones *sent* at point t-1, so the transfer is in flight
+      across the intervening compute (fire-and-forget staleness, still
+      deterministic and seeded).
+    * ``sweeps_per_launch=S`` — fuse S full sweeps into one device-local
+      launch between exchange points.  With no mid-launch exchange points
+      and counter noise the engine runs the launch through the
+      sweep-resident Pallas kernel (`kernels/shard_sweep.py::
+      fused_shard_sweeps`) — spins VMEM-resident, in-kernel RNG.
+
+    ``halo_every=1`` keeps the sharded == single-device bit-exactness
+    contract; anything looser is a *documented, measured* approximation —
+    tests/test_sync_policies.py bounds the KL gap, the ``sync_policies``
+    section of BENCH_kernel.json tracks the wall-clock win
+    (docs/sharding.md §Sync policies).
+    """
+
+    halo_every: int | float = 1
+    mode: str = "barrier"
+    sweeps_per_launch: int = 1
+
+    def __post_init__(self):
+        k = self.halo_every
+        if not (k == math.inf or (isinstance(k, int) and k >= 1)):
+            raise ValueError(
+                f"Sync.halo_every must be an int >= 1 or math.inf, got "
+                f"{k!r}")
+        if self.mode not in ("barrier", "async"):
+            raise ValueError(
+                f"Sync.mode must be 'barrier' or 'async', got {self.mode!r}")
+        if not (isinstance(self.sweeps_per_launch, int)
+                and self.sweeps_per_launch >= 1):
+            raise ValueError(
+                f"Sync.sweeps_per_launch must be an int >= 1, got "
+                f"{self.sweeps_per_launch!r}")
+
+    @property
+    def bit_exact(self) -> bool:
+        """Does this policy preserve the sharded == single-device spin
+        trajectory exactly?  Only the per-half-sweep barrier does."""
+        return self.mode == "barrier" and self.halo_every == 1
+
+    @property
+    def launch_resident(self) -> bool:
+        return self.sweeps_per_launch > 1
+
+    def exchange_points(self) -> tuple[int, ...]:
+        """Within-launch half-sweep indices at which halos refresh.
+
+        A launch spans ``2 * sweeps_per_launch`` half-sweeps; index 0 (the
+        launch boundary) always refreshes."""
+        n_half = 2 * self.sweeps_per_launch
+        if self.halo_every == math.inf:
+            return (0,)
+        k = int(self.halo_every)
+        return tuple(hs for hs in range(n_half) if hs % k == 0)
+
+    @property
+    def kernel_fusible(self) -> bool:
+        """No mid-launch exchange -> a launch can run inside one Pallas
+        kernel (the fused per-shard path also needs counter noise)."""
+        return self.exchange_points() == (0,)
+
+    def exchanges_per_sweep(self, refresh_for_moments: bool = False
+                            ) -> float:
+        """Average halo exchanges per full sweep under this policy (the
+        halo-bytes model's multiplier; docs/sharding.md)."""
+        per = len(self.exchange_points()) / self.sweeps_per_launch
+        if refresh_for_moments and self.bit_exact:
+            per += 1.0  # post-sweep refresh for boundary-edge correlations
+        return per
+
+
+# ---------------------------------------------------------------------------
 # The spec
 # ---------------------------------------------------------------------------
 @jax.tree_util.register_pytree_node_class
@@ -229,6 +328,7 @@ class SamplerSpec:
     interpret: bool | None = None  # Pallas interpret; None -> env at compile
     mesh: Any = None            # jax.sharding.Mesh; None -> single device
     partition: Partition | None = None  # how to cut over mesh; None -> default
+    sync: Sync | None = None    # shard sync policy; None -> Sync() barrier
 
     # -- pytree ----------------------------------------------------------
     def tree_flatten(self):
@@ -263,6 +363,13 @@ class SamplerSpec:
         if self.mesh is None:
             return None
         return self.partition if self.partition is not None else Partition()
+
+    def sync_policy(self) -> Sync | None:
+        """The effective Sync policy: the bit-exact per-half-sweep barrier
+        when a mesh is given without an explicit sync; None unsharded."""
+        if self.mesh is None:
+            return None
+        return self.sync if self.sync is not None else Sync()
 
     # -- validation ------------------------------------------------------
     def validate(self) -> "SamplerSpec":
@@ -301,6 +408,10 @@ class SamplerSpec:
             raise ValueError(
                 "partition= set but mesh=None; pass the device mesh the "
                 "partition shards over (e.g. launch.mesh.make_host_mesh)")
+        if self.sync is not None and self.mesh is None:
+            raise ValueError(
+                "sync= is a sharded-execution policy (how often row bands "
+                "exchange halos) but mesh=None; pass mesh= or drop sync=")
         part = self.partitioning()
         if part is None:
             return
@@ -327,11 +438,28 @@ class SamplerSpec:
             raise ValueError(
                 "sharded execution runs on the Chimera slot layout; use "
                 "attach_sparse=True or a sparse-native mismatch")
-        if self.backend not in (None, "auto", "sparse"):
+        sync = self.sync_policy()
+        if self.backend not in (None, "auto", "sparse", "fused_sparse"):
             raise ValueError(
-                f"sharded Sessions run the slot-layout scan path; backend "
-                f"must be 'sparse' or 'auto', got {self.backend!r} (the "
-                f"fused engines cannot halo-exchange mid-launch)")
+                f"sharded Sessions run the slot-layout scan path or, under "
+                f"a launch-resident sync policy, the fused per-shard "
+                f"kernel; backend must be 'sparse', 'fused_sparse', or "
+                f"'auto', got {self.backend!r}")
+        if self.backend == "fused_sparse":
+            if not sync.kernel_fusible:
+                raise ValueError(
+                    f"backend 'fused_sparse' runs whole launches inside one "
+                    f"kernel and cannot halo-exchange mid-launch, but "
+                    f"sync={sync} asks for exchanges at within-launch "
+                    f"half-sweeps {sync.exchange_points()[1:]}; use "
+                    f"halo_every=math.inf (or >= 2*sweeps_per_launch), or "
+                    f"backend='sparse'")
+            if self.noise != "counter":
+                raise ValueError(
+                    f"the fused per-shard kernel regenerates noise "
+                    f"in-kernel from global (chain, node) coordinates and "
+                    f"needs noise='counter', got {self.noise!r}; use "
+                    f"backend='sparse' for lfsr")
         n_row = 1
         for ax in rows:
             n_row *= self.mesh.shape[ax]
@@ -358,13 +486,15 @@ def resolve_backend(spec: SamplerSpec) -> str:
     then the kernels.md model.  The returned string is baked into the
     Session's closures — no env read ever happens at call time.
 
-    A sharded spec (mesh=) always resolves to "sparse": the mesh engine
-    runs the slot-layout scan per shard (validated in the spec), and the
-    env default must not be able to push it onto a backend that cannot
-    halo-exchange.
+    A sharded spec (mesh=) runs the slot-layout scan per shard
+    ("sparse"), or — when the sync policy is launch-resident with no
+    mid-launch exchanges and the noise is counter — the fused per-shard
+    kernel ("fused_sparse"), which ``auto`` picks by itself.  An env
+    default naming a backend the partition cannot honor raises instead of
+    being silently overridden.
     """
     if spec.mesh is not None:
-        return "sparse"
+        return _resolve_sharded_backend(spec)
     b = spec.backend
     if b in (None, "auto"):
         env = os.environ.get("REPRO_PBIT_BACKEND")
@@ -380,6 +510,44 @@ def resolve_backend(spec: SamplerSpec) -> str:
             f"REPRO_PBIT_BACKEND={b!r} cannot run a sparse-native spec "
             f"(no dense W); use 'sparse' or 'fused_sparse'")
     return b
+
+
+def _resolve_sharded_backend(spec: SamplerSpec) -> str:
+    """Backend resolution under a mesh: 'sparse' or 'fused_sparse' only.
+
+    The env default participates like everywhere else, but a value the
+    partition cannot honor is a hard error — a sharded Session silently
+    falling back to a different engine than the one the operator pinned
+    is exactly the "works on my box" bug class the Session layer exists
+    to kill.
+    """
+    sync = spec.sync_policy()
+    fused_ok = spec.noise == "counter" and sync.kernel_fusible
+    b = spec.backend
+    src = f"backend={b!r}"
+    if b in (None, "auto"):
+        env = os.environ.get("REPRO_PBIT_BACKEND")
+        if env:
+            b, src = env, f"REPRO_PBIT_BACKEND={env!r}"
+        else:
+            return ("fused_sparse"
+                    if fused_ok and sync.launch_resident else "sparse")
+    if b == "sparse":
+        return b
+    if b == "fused_sparse":
+        if not fused_ok:
+            raise ValueError(
+                f"{src} names the fused per-shard kernel, but this sharded "
+                f"spec cannot run it (needs noise='counter' and a sync "
+                f"policy with no mid-launch halo exchanges; got noise="
+                f"{spec.noise!r}, sync={sync}); use 'sparse' or fix the "
+                f"sync policy")
+        return b
+    raise ValueError(
+        f"{src} cannot run a mesh-sharded spec: the partitioned engine "
+        f"supports 'sparse' (scan per shard) or 'fused_sparse' (launch-"
+        f"resident kernel per shard), and the single-device backends "
+        f"cannot halo-exchange")
 
 
 def _auto_backend(spec: SamplerSpec) -> str:

@@ -72,6 +72,7 @@ class PBitMachine:
     w_scale: float = 0.05  # weight-LSB -> coupling units (ext. resistor knob)
     mesh: object = None     # jax.sharding.Mesh -> multi-device sessions
     partition: object = None  # api.Partition; None -> rows over "data"
+    sync: object = None     # api.Sync; None -> bit-exact barrier policy
 
     @staticmethod
     def create(graph: ChimeraGraph, key: jax.Array,
@@ -132,6 +133,7 @@ class PBitMachine:
         """The declarative `api.SamplerSpec` for this chip instance."""
         kw.setdefault("mesh", self.mesh)
         kw.setdefault("partition", self.partition)
+        kw.setdefault("sync", self.sync)
         return api.SamplerSpec(
             graph=self.graph, hw=self.hw, mismatch=self.mismatch,
             noise=self.noise, backend=self.backend, schedule=schedule,

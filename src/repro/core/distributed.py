@@ -12,13 +12,18 @@ wants.  This module is the sharded execution layer behind
     the boundary send lists (the O(√N) chain-coupler spins), the
     per-device edge lists for moment accumulation, and the LFSR cell
     bands for chip-faithful noise.
-  * `ShardedEngine` compiles the plan into `shard_map`-wrapped sweeps:
-    per half-sweep each device ppermutes its boundary spins to its row
-    neighbors (`kernels/shard_sweep.py`), regenerates its own noise
-    columns from the *global* (chain, node) coordinates, and runs the
-    slot-layout half-sweep locally — no dense W, no global gather, ever.
-    Spins are bit-exact vs the single-device scan backends for the same
-    noise stream.  The Gibbs-chain axis shards the same way (CD's
+  * `ShardedEngine` compiles the plan plus the spec's `api.Sync` policy
+    into `shard_map`-wrapped launch loops: at each exchange point a
+    device ppermutes its boundary spins to its row neighbors
+    (`kernels/shard_sweep.py`), regenerates its own noise columns from
+    the *global* (chain, node) coordinates, and runs the slot-layout
+    sweeps locally — no dense W, no global gather, ever.  Under the
+    default barrier policy (exchange every half-sweep) spins are
+    bit-exact vs the single-device scan backends for the same noise
+    stream; relaxed policies (halo_every=k, PASS-style async double
+    buffering, launch-resident fused kernels) are deterministic, seeded
+    approximations measured against it (docs/sharding.md §Sync
+    policies).  The Gibbs-chain axis shards the same way (CD's
     embarrassingly parallel dimension); the (E,) edge-list moments are
     psum-reduced once per phase.
 
@@ -42,7 +47,11 @@ from repro.core import lfsr as lfsr_mod
 from repro.core.chimera import ChimeraGraph, make_chimera
 from repro.core.hardware import EffectiveChip, HardwareConfig
 from repro.kernels.ref import sparse_neuron_input
-from repro.kernels.shard_sweep import halo_exchange, halo_half_sweep
+from repro.kernels.shard_sweep import (
+    fused_shard_sweeps,
+    halo_exchange,
+    halo_half_sweep,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -221,24 +230,33 @@ def _plan_lfsr_cells(graph, n_shards, r_start, part_ids, valid, node_starts):
 
 
 def halo_bytes_per_sweep(plan: RowPartition, chains: int,
-                         refresh_for_moments: bool = False) -> int:
+                         refresh_for_moments: bool = False,
+                         sync=None):
     """Total float32 bytes crossing internal band cuts per full sweep.
 
-    Two half-sweeps, each moving every internal boundary spin in both
-    directions, for every chain; +1 exchange per sweep when moments are
-    accumulated (the post-sweep refresh for boundary-edge correlations).
-    O(boundary) = O(√N · n_shards) — compare 4·N² bytes to replicate a
-    dense W.
+    Under the default barrier policy: two half-sweeps, each moving every
+    internal boundary spin in both directions, for every chain; +1
+    exchange per sweep when moments are accumulated (the post-sweep
+    refresh for boundary-edge correlations).  An `api.Sync` policy scales
+    the multiplier by its exchange schedule — ``halo_every=k`` divides it
+    by ~k, a launch-resident policy (``sweeps_per_launch=S`` with
+    launch-boundary-only exchange) by 2S (docs/sharding.md §Sync
+    policies; the relaxed policies drop the moment refresh, so the result
+    may be fractional).  O(boundary) = O(√N · n_shards) either way —
+    compare 4·N² bytes to replicate a dense W.
     """
-    exchanges = 3 if refresh_for_moments else 2
-    return exchanges * plan.n_boundary * chains * 4
+    if sync is None:
+        from repro.api.spec import Sync
+        sync = Sync()
+    return sync.exchanges_per_sweep(refresh_for_moments) \
+        * plan.n_boundary * chains * 4
 
 
 # ---------------------------------------------------------------------------
 # The sharded engine (compiled into api.Session closures)
 # ---------------------------------------------------------------------------
 class ShardedEngine:
-    """Plan + mesh -> device-local sweep implementations.
+    """Plan + mesh + sync policy -> device-local sweep implementations.
 
     Built once at `api.Session` compile when the spec carries a mesh.
     The public impls (`sample` / `stats` / `visible_hist`) keep the exact
@@ -246,15 +264,37 @@ class ShardedEngine:
     global noise state) — the Session's closures call them unchanged, so
     every workload (CD, annealing, tempering, Max-Cut) shards without
     modification.
+
+    The `api.Sync` policy is compiled into a *launch loop*: the sweep
+    schedule is cut into launches of ``sweeps_per_launch`` sweeps, the
+    scan runs over launches, and the L sweeps inside a launch unroll with
+    the policy's exchange points placed statically — no collective ever
+    sits behind a traced conditional.  Halo buffers (and, in async mode,
+    the in-flight double buffer) thread through the scan carry, so
+    between exchange points every band samples against a *stale* halo —
+    the deterministic, seeded emulation of the chip's clockless fabric.
+    ``Sync()`` (barrier, halo_every=1) reproduces the single-device
+    trajectory bit for bit; under a launch-resident counter-noise policy
+    the whole launch runs inside the sweep-resident Pallas kernel
+    (`kernels/shard_sweep.py::fused_shard_sweeps`, backend
+    "fused_sparse").
     """
 
     def __init__(self, graph: ChimeraGraph, mesh: Mesh, partition,
-                 noise: str, decimation: int, chains: int):
+                 noise: str, decimation: int, chains: int, *,
+                 sync=None, backend: str = "sparse",
+                 interpret: bool = True):
+        if sync is None:
+            from repro.api.spec import Sync
+            sync = Sync()
         self.graph = graph
         self.mesh = mesh
         self.noise = noise
         self.decimation = decimation
         self.chains = chains
+        self.sync = sync
+        self.interpret = interpret
+        self._fused = backend == "fused_sparse"
         self.rows_axes = partition.rows_axes
         self.chain_axes = partition.chain_axes
         self.n_row = int(np.prod([mesh.shape[a] for a in self.rows_axes],
@@ -291,6 +331,15 @@ class ShardedEngine:
             self._dev["lfsr_perm"] = jnp.asarray(p.lfsr_perm)
             self._cell_ids = jnp.asarray(p.cell_ids)
             self._cell_inv = jnp.asarray(p.cell_inv)
+        if self._fused:
+            # per-edge slot row into the kernel's (D, N_ext) correlation
+            # scratch: edge q of band b lives at c_slots[edge_slot[b, q],
+            # edge_e0[b, q]] (endpoint 0 is always local)
+            es = np.zeros((p.n_shards, p.e_loc), np.int32)
+            for b in range(p.n_shards):
+                hit = p.nbr_idx[b][:, p.edge_e0[b]] == p.edge_e1[b][None, :]
+                es[b] = np.argmax(hit, axis=0)
+            self._dev["edge_slot"] = jnp.asarray(es)
 
     # -- spec helpers ----------------------------------------------------
     def _dev_specs(self):
@@ -305,6 +354,8 @@ class ShardedEngine:
         }
         if self.noise == "lfsr":
             specs["lfsr_perm"] = P(self._r, None)
+        if self._fused:
+            specs["edge_slot"] = P(self._r, None)
         return specs
 
     def _chip_specs(self):
@@ -385,12 +436,48 @@ class ShardedEngine:
         return step
 
     def _local_sweeps(self, clamped, collect, accumulate, hist_w):
-        """The per-device scan over sweeps.  Returns
+        """The per-device launch loop.  Returns
         run(dev, chip, m, ns, betas, measured?, cm?, cv?) -> mode outputs
         — ``dev`` is the *sharded* plan-table argument shard_map hands
         each device (never a closure capture, which would replicate
-        device 0's tables everywhere)."""
+        device 0's tables everywhere).
+
+        The sync policy shapes the loop at trace time: every halo
+        exchange sits at a statically-placed exchange point, and halos
+        are reused (stale) from the carry in between — no collective ever
+        hides behind a traced conditional.  Async mode double-buffers the
+        exchange: the values consumed at an exchange point were sent at
+        the previous one, so the ppermute overlaps the intervening
+        interior compute.  Three loop shapes, picked at compile:
+
+          * fused — launch-resident counter-noise policies run each
+            launch as one `fused_shard_sweeps` Pallas call (sample and
+            stats paths; collect/hist fall back to the segment scan).
+          * segment scan — exchanges uniformly spaced at full-sweep
+            boundaries (``halo_every`` even or inf): outer scan over
+            inter-exchange segments, inner scan over the uniform sweeps
+            between them.  Keeps the compiled body one-sweep-sized —
+            Python-unrolling S sweeps makes XLA's CPU pipeline blow up
+            super-linearly in S.
+          * unrolled launch — odd ``halo_every`` (exchange points inside
+            a sweep, e.g. the k=1 barrier's two per sweep): scan over
+            launches with the L sweeps unrolled statically.  L=1
+            reproduces the pre-policy engine graph exactly.
+        """
         n_loc = self.plan.n_loc
+        sync = self.sync
+        L = sync.sweeps_per_launch
+        k = sync.halo_every
+        ex_pts = sync.exchange_points()
+        async_ = sync.mode == "async"
+        k1_exact = sync.bit_exact
+        use_fused = self._fused and not collect and hist_w is None
+        if use_fused or ex_pts == (0,):
+            seg_sweeps = L                  # exchange at launch starts only
+        elif isinstance(k, int) and k % 2 == 0 and (2 * L) % k == 0:
+            seg_sweeps = k // 2             # uniform inter-exchange segments
+        else:
+            seg_sweeps = None               # unrolled launch body
 
         def run(dev, chip, m, ns, betas, measured=None, cm=None, cv=None,
                 vis_idx=None, vis_w=None):
@@ -410,59 +497,185 @@ class ShardedEngine:
             if clamped:
                 masks = [mk & ~cm for mk in masks]
 
-            def sweep(carry, xs):
-                m, ns = carry[0], carry[1]
-                beta_t = xs[0]
-                if clamped and cv is not None:
-                    m = jnp.where(cm, cv, m)
-                for c in (0, 1):
-                    hu, hd = exchange(m)
-                    ns, u = nstep(ns, chain0)
-                    m = halo_half_sweep(m, hu, hd, nbr, w, h, gain, off,
-                                        rg, co, masks[c], beta_t, u)
-                out = None
+            S_total = int(betas.shape[0])
+            if S_total % L:
+                raise ValueError(
+                    f"this Session's sync policy fuses sweeps_per_launch="
+                    f"{L} sweeps per launch, which must divide the "
+                    f"schedule length (got {S_total} sweeps); pad the "
+                    f"schedule or change the Sync policy")
+
+            def swap(m, hu, hd, pend):
+                """One exchange point: barrier consumes the fresh values;
+                async consumes the in-flight buffer and refills it."""
+                fresh = exchange(m)
+                if async_:
+                    return pend[0], pend[1], fresh
+                return fresh[0], fresh[1], pend
+
+            def sweep_stats(m, ru, rd, w_t, accs):
+                """Per-sweep moment / histogram accumulation against the
+                halo view (ru, rd) the policy defines."""
+                accs = list(accs)
                 if accumulate:
-                    w_t = xs[1]
-                    hu, hd = exchange(m)   # refresh for boundary edges
-                    m_ext = jnp.concatenate([m, hu, hd], axis=1)
+                    m_ext = jnp.concatenate([m, ru, rd], axis=1)
                     corr = m_ext[:, dev["edge_e0"][0]] \
                         * m_ext[:, dev["edge_e1"][0]]
-                    s_acc, c_acc = carry[2], carry[3]
                     if self.n_chain == 1:
                         # dense-identical accumulation order (any B)
-                        s_acc = s_acc + w_t * jnp.mean(m, axis=0)
-                        c_acc = c_acc + w_t * jnp.mean(corr, axis=0)
+                        accs[0] = accs[0] + w_t * jnp.mean(m, axis=0)
+                        accs[1] = accs[1] + w_t * jnp.mean(corr, axis=0)
                     else:
                         # raw ±1 sums; psum + one division at the end —
                         # bit-exact vs dense for power-of-two chains
-                        s_acc = s_acc + w_t * jnp.sum(m, axis=0)
-                        c_acc = c_acc + w_t * jnp.sum(corr, axis=0)
-                    carry_out = (m, ns, s_acc, c_acc)
-                elif hist_w is not None:
-                    w_t = xs[1]
+                        accs[0] = accs[0] + w_t * jnp.sum(m, axis=0)
+                        accs[1] = accs[1] + w_t * jnp.sum(corr, axis=0)
+                else:  # histogram
                     bits = (jnp.take(m, vis_idx, axis=1) > 0).astype(
                         jnp.int32)
                     code = jnp.sum(bits * vis_w[None, :], axis=1)
                     if self.n_row > 1:
                         code = jax.lax.psum(code, self._row_name)
-                    hist = carry[2].at[code].add(w_t)
-                    carry_out = (m, ns, hist)
-                else:
-                    carry_out = (m, ns)
-                    if collect:
-                        out = m
-                return carry_out, out
+                    accs[0] = accs[0].at[code].add(w_t)
+                return accs
 
-            xs = (betas,) if measured is None else (betas, measured)
+            def launch(carry, xs_t):
+                """Fused kernel launch, or L statically-unrolled sweeps
+                (the odd-``halo_every`` shapes, incl. the k=1 barrier)."""
+                m, ns, hu, hd = carry[0], carry[1], carry[2], carry[3]
+                base = 4
+                pend = ()
+                if async_:
+                    pend, base = (carry[4], carry[5]), 6
+                accs = list(carry[base:])
+                betas_t = xs_t[0]
+                meas_t = xs_t[1] if len(xs_t) > 1 else None
+                outs = []
+
+                if use_fused:
+                    if clamped and cv is not None:
+                        m = jnp.where(cm, cv, m)
+                    hu, hd, pend = swap(m, hu, hd, pend)
+                    kwc = {}
+                    if clamped and cv is not None:
+                        kwc = dict(clamp_mask=cm, clamp_values=cv)
+                    res = fused_shard_sweeps(
+                        m, hu, hd, nbr, w, h, gain, off, rg, co,
+                        masks[0], masks[1], betas_t, ns, chain0,
+                        dev["cols"][0][0],
+                        measured=meas_t if accumulate else None,
+                        interpret=self.interpret, **kwc)
+                    m, ns = res[0], res[1]
+                    if accumulate:
+                        s_k = res[2]
+                        c_k = res[3][dev["edge_slot"][0],
+                                     dev["edge_e0"][0]]
+                        if self.n_chain == 1:
+                            b = jnp.float32(m.shape[0])
+                            s_k, c_k = s_k / b, c_k / b
+                        accs[0] = accs[0] + s_k
+                        accs[1] = accs[1] + c_k
+                else:
+                    for s in range(L):
+                        beta_t = betas_t[s]
+                        if clamped and cv is not None:
+                            m = jnp.where(cm, cv, m)
+                        for c in (0, 1):
+                            if 2 * s + c in ex_pts:
+                                hu, hd, pend = swap(m, hu, hd, pend)
+                            ns, u = nstep(ns, chain0)
+                            m = halo_half_sweep(m, hu, hd, nbr, w, h,
+                                                gain, off, rg, co,
+                                                masks[c], beta_t, u)
+                        if accumulate:
+                            if k1_exact:
+                                # post-sweep refresh for boundary edges —
+                                # part of the bit-exact contract
+                                ru, rd = exchange(m)
+                            else:
+                                # relaxed policies read the (stale) halo
+                                # the sweep itself saw
+                                ru, rd = hu, hd
+                            accs = sweep_stats(m, ru, rd, meas_t[s], accs)
+                        elif hist_w is not None:
+                            accs = sweep_stats(m, hu, hd, meas_t[s], accs)
+                        elif collect:
+                            outs.append(m)
+
+                new_carry = (m, ns, hu, hd) + (pend if async_ else ()) \
+                    + tuple(accs)
+                return new_carry, (jnp.stack(outs) if collect else None)
+
+            def segment(carry, xs_t):
+                """One inter-exchange segment: swap once, then an inner
+                scan over the uniform exchange-free sweeps — keeps the
+                compiled body one-sweep-sized instead of unrolling."""
+                m, ns, hu, hd = carry[0], carry[1], carry[2], carry[3]
+                base = 4
+                pend = ()
+                if async_:
+                    pend, base = (carry[4], carry[5]), 6
+                accs = tuple(carry[base:])
+                betas_t = xs_t[0]
+                meas_t = xs_t[1] if len(xs_t) > 1 else None
+                if clamped and cv is not None:
+                    m = jnp.where(cm, cv, m)   # boundary sent post-clamp
+                hu, hd, pend = swap(m, hu, hd, pend)
+
+                def sweep_body(c2, xs_s):
+                    m, ns = c2[0], c2[1]
+                    accs2 = tuple(c2[2:])
+                    beta_t = xs_s[0]
+                    if clamped and cv is not None:
+                        m = jnp.where(cm, cv, m)
+                    for c in (0, 1):
+                        ns, u = nstep(ns, chain0)
+                        m = halo_half_sweep(m, hu, hd, nbr, w, h, gain,
+                                            off, rg, co, masks[c],
+                                            beta_t, u)
+                    out = None
+                    if accumulate or hist_w is not None:
+                        accs2 = tuple(sweep_stats(m, hu, hd, xs_s[1],
+                                                  accs2))
+                    elif collect:
+                        out = m
+                    return (m, ns) + accs2, out
+
+                xs_s = (betas_t,) if meas_t is None else (betas_t, meas_t)
+                inner, outs = jax.lax.scan(sweep_body, (m, ns) + accs,
+                                           xs_s)
+                new_carry = (inner[0], inner[1], hu, hd) \
+                    + (pend if async_ else ()) + tuple(inner[2:])
+                return new_carry, outs
+
+            chunk = L if (use_fused or seg_sweeps is None) else seg_sweeps
+            body = launch if (use_fused or seg_sweeps is None) else segment
+            betas_l = betas.reshape((S_total // chunk, chunk)
+                                    + betas.shape[1:])
+            xs = (betas_l,)
+            if measured is not None:
+                xs = (betas_l, measured.reshape(S_total // chunk, chunk))
+            zh = jnp.zeros((m.shape[0], self.plan.halo), m.dtype)
+            init = (m, ns, zh, zh)
+            if async_:
+                # prime the in-flight buffer with the initial boundary —
+                # post-clamp, exactly what the first barrier exchange
+                # would send — so the first consumption matches barrier
+                m_pr = m
+                if clamped and cv is not None:
+                    m_pr = jnp.where(cm, cv, m)
+                init = init + exchange(m_pr)
             if accumulate:
-                init = (m, ns, jnp.zeros((n_loc,), jnp.float32),
-                        jnp.zeros((dev["edge_e0"].shape[1],), jnp.float32))
+                init = init + (
+                    jnp.zeros((n_loc,), jnp.float32),
+                    jnp.zeros((dev["edge_e0"].shape[1],), jnp.float32))
             elif hist_w is not None:
-                init = (m, ns, jnp.zeros((2 ** hist_w,), jnp.float32))
-            else:
-                init = (m, ns)
-            final, traj = jax.lax.scan(sweep, init, xs)
-            return final, traj
+                init = init + (jnp.zeros((2 ** hist_w,), jnp.float32),)
+            final, traj = jax.lax.scan(body, init, xs)
+            if collect and traj is not None:
+                traj = traj.reshape((S_total,) + traj.shape[2:])
+            base = 6 if async_ else 4
+            return (final[0], final[1]) + final[base:], traj
 
         return run
 

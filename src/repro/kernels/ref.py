@@ -1,7 +1,34 @@
-"""Pure-jnp oracles for every Pallas kernel in this package."""
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+`field_decision_update` is THE half-sweep field-accumulation body: eqn 2
+(tanh activation, additive RNG, comparator sign, masked write) in one
+place.  The dense ref, the sparse ref, and the sharded halo path
+(kernels/shard_sweep.py) all call it, so a change to the neuron model —
+or to the sync-policy machinery that replays it per shard — edits exactly
+one term list.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+
+def field_decision_update(m, I, gain, off, rand_gain, comp_off,
+                          update_mask, beta, u):
+    """Eqn 2 on a precomputed neuron input I: the shared half-sweep tail.
+
+    m/I/u: (B, N);  gain/off/rand_gain/comp_off: (N,);  update_mask: (N,)
+    bool;  beta: scalar or (B,) per-chain inverse temperature.  Exact op
+    order is load-bearing: every backend (ref, Pallas, sparse, sharded)
+    reproduces this sequence term for term, which is what makes them
+    bit-exact against each other.
+    """
+    beta = jnp.asarray(beta, jnp.float32)
+    if beta.ndim == 1:
+        beta = beta[:, None]
+    act = jnp.tanh(beta * gain * (I + off))
+    decision = act + rand_gain * u + comp_off
+    new = jnp.where(decision >= 0.0, 1.0, -1.0).astype(m.dtype)
+    return jnp.where(update_mask, new, m)
 
 
 def pbit_half_sweep_ref(m, W, h, gain, off, rand_gain, comp_off,
@@ -13,28 +40,27 @@ def pbit_half_sweep_ref(m, W, h, gain, off, rand_gain, comp_off,
     update_mask: (N,) bool;  beta: scalar or (B,) per-chain inverse
     temperature (parallel tempering replicas);  u: (B, N) uniform noise.
     """
-    beta = jnp.asarray(beta, jnp.float32)
-    if beta.ndim == 1:
-        beta = beta[:, None]
     I = m @ W.T + h
-    act = jnp.tanh(beta * gain * (I + off))
-    decision = act + rand_gain * u + comp_off
-    new = jnp.where(decision >= 0.0, 1.0, -1.0).astype(m.dtype)
-    return jnp.where(update_mask, new, m)
+    return field_decision_update(m, I, gain, off, rand_gain, comp_off,
+                                 update_mask, beta, u)
 
 
 def sparse_neuron_input(m, nbr_idx, nbr_w, h):
     """Eqn 1 on the fixed-degree slot layout: I = Σ_d w_d ⊙ m[:, idx_d] + h.
 
-    m: (B, N); nbr_idx/nbr_w: (D, N) neighbor table (ChimeraGraph.
-    neighbor_table + hardware.attach_sparse).  O(B·N·D) instead of the dense
+    m: (B, M) gather source; nbr_idx/nbr_w: (D, N) neighbor table
+    (ChimeraGraph.neighbor_table + hardware.attach_sparse).  The output is
+    (B, N) — normally M == N, but the sharded engine passes the
+    halo-extended source [local | halo_up | halo_dn] (M = N + 2H) with a
+    table re-indexed into it, which is how one body serves both the
+    single-device and the sharded path.  O(B·N·D) instead of the dense
     O(B·N²) matmul.  Slots accumulate in ascending-d order — the identical
     op order the sparse Pallas kernel uses, so ref and kernel agree bit for
     bit; with neighbors sorted ascending it also reproduces the dense
     sequential row reduction exactly (zeros are additive identities).
     """
     D = nbr_idx.shape[0]
-    acc = jnp.zeros(m.shape, jnp.float32)
+    acc = jnp.zeros((m.shape[0], nbr_idx.shape[1]), jnp.float32)
     for d in range(D):
         acc = acc + nbr_w[d][None, :] * jnp.take(m, nbr_idx[d], axis=1)
     return acc + h
@@ -43,14 +69,9 @@ def sparse_neuron_input(m, nbr_idx, nbr_w, h):
 def pbit_sparse_half_sweep_ref(m, nbr_idx, nbr_w, h, gain, off, rand_gain,
                                comp_off, update_mask, beta, u):
     """`pbit_half_sweep_ref` with the degree-D gather replacing the matmul."""
-    beta = jnp.asarray(beta, jnp.float32)
-    if beta.ndim == 1:
-        beta = beta[:, None]
     I = sparse_neuron_input(m, nbr_idx, nbr_w, h)
-    act = jnp.tanh(beta * gain * (I + off))
-    decision = act + rand_gain * u + comp_off
-    new = jnp.where(decision >= 0.0, 1.0, -1.0).astype(m.dtype)
-    return jnp.where(update_mask, new, m)
+    return field_decision_update(m, I, gain, off, rand_gain, comp_off,
+                                 update_mask, beta, u)
 
 
 def lattice_vertical_update_ref(m_v, m_h, m_v_up, m_v_dn, W_vh, wv_up,

@@ -8,17 +8,30 @@ half-sweep ever reads are the chain-coupler boundary spins of the two row
 neighbors — the ``halo_up`` / ``halo_dn`` blocks exchanged by
 ``jax.lax.ppermute`` in `halo_exchange`.
 
-`halo_half_sweep` is `kernels/ref.py::pbit_sparse_half_sweep_ref` with the
-gather source extended from the local block to [local | halo_up | halo_dn]:
-slots accumulate in the identical ascending-d order and every elementwise
-op matches term for term, so a sharded sweep is *bit-exact* against the
-single-device sparse scan (and therefore against the dense ref) for the
-same noise stream — the contract tests/test_shard_session.py enforces.
+Both device-local sweep bodies are the SAME code as the single-device
+backends:
+
+  * `halo_half_sweep` is `kernels/ref.py::sparse_neuron_input` +
+    `field_decision_update` with the gather source extended from the
+    local block to [local | halo_up | halo_dn] — one shared term list,
+    so a sharded half-sweep is *bit-exact* against the single-device
+    sparse scan (and therefore the dense ref) for the same noise stream.
+  * `fused_shard_sweeps` runs S *resident* sweeps on the same extended
+    block through `kernels/sweep_fused.py::sweep_sparse_pallas`: halo
+    columns are frozen (excluded from the update masks) and the
+    in-kernel counter RNG is shifted to this shard's global
+    (chain, node) coordinates via ``coord_offset``, so the kernel
+    consumes exactly the columns of the noise stream the scan path
+    would.  This is the per-shard engine behind launch-resident
+    `api.Sync` policies (docs/sharding.md §Sync policies).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.ref import field_decision_update, sparse_neuron_input
+from repro.kernels.sweep_fused import sweep_sparse_pallas
 
 
 def halo_exchange(
@@ -62,30 +75,100 @@ def halo_neuron_input(
 
     nbr_idx: (D, N_loc) indices into the *extended* array
     [local | halo_up | halo_dn]; nbr_w: (D, N_loc) local slot weights.
-    Ascending-d accumulation, zero init, ``+ h`` last — the exact op
-    order of `kernels/ref.py::sparse_neuron_input`, which is what keeps
-    the sharded path bit-exact vs the single-device backends.
+    Literally `kernels/ref.py::sparse_neuron_input` on the extended
+    gather source — the one shared accumulation body (ascending-d order,
+    zero init, ``+ h`` last) that keeps the sharded path bit-exact vs the
+    single-device backends.
     """
     m_ext = jnp.concatenate([m_loc, halo_up, halo_dn], axis=1)
-    D = nbr_idx.shape[0]
-    acc = jnp.zeros(m_loc.shape, jnp.float32)
-    for d in range(D):
-        acc = acc + nbr_w[d][None, :] * jnp.take(m_ext, nbr_idx[d], axis=1)
-    return acc + h
+    return sparse_neuron_input(m_ext, nbr_idx, nbr_w, h)
 
 
 def halo_half_sweep(m_loc, halo_up, halo_dn, nbr_idx, nbr_w, h, gain, off,
                     rand_gain, comp_off, update_mask, beta, u):
-    """`pbit_sparse_half_sweep_ref` with the halo-extended gather source.
+    """The sparse half-sweep with the halo-extended gather source.
 
     m_loc/u: (B, N_loc); update_mask: (N_loc,) bool (padding lanes False);
-    beta: scalar or (B,) per-chain inverse temperature.
+    beta: scalar or (B,) per-chain inverse temperature.  The decision tail
+    is the shared `kernels/ref.py::field_decision_update`.
     """
-    beta = jnp.asarray(beta, jnp.float32)
-    if beta.ndim == 1:
-        beta = beta[:, None]
     I = halo_neuron_input(m_loc, halo_up, halo_dn, nbr_idx, nbr_w, h)
-    act = jnp.tanh(beta * gain * (I + off))
-    decision = act + rand_gain * u + comp_off
-    new = jnp.where(decision >= 0.0, 1.0, -1.0).astype(m_loc.dtype)
-    return jnp.where(update_mask, new, m_loc)
+    return field_decision_update(m_loc, I, gain, off, rand_gain, comp_off,
+                                 update_mask, beta, u)
+
+
+def fused_shard_sweeps(
+    m_loc: jax.Array,            # (B, N_loc) local spins
+    halo_up: jax.Array,          # (B, H) frozen for the whole launch
+    halo_dn: jax.Array,          # (B, H)
+    nbr_idx: jax.Array,          # (D, N_loc) ext-local neighbor table
+    nbr_w: jax.Array,            # (D, N_loc) slot weights
+    h: jax.Array,
+    gain: jax.Array,
+    off: jax.Array,
+    rand_gain: jax.Array,
+    comp_off: jax.Array,
+    mask0: jax.Array,            # (N_loc,) bool color-0 update set
+    mask1: jax.Array,            # (N_loc,) bool
+    betas: jax.Array,            # (S,) or (S, B) per-launch schedule slice
+    noise_state: jax.Array,      # (2,) uint32 counter state
+    row0: jax.Array,             # uint32 global id of this device's chain 0
+    col0: jax.Array,             # uint32 global id of local node 0
+    clamp_mask: jax.Array | None = None,    # (N_loc,) bool
+    clamp_values: jax.Array | None = None,  # (B, N_loc)
+    measured: jax.Array | None = None,      # (S,) moment weights
+    *,
+    block_b: int = 128,
+    interpret: bool = True,
+):
+    """One sweep-resident launch on the halo-extended local block.
+
+    Runs S full sweeps inside a single `sweep_sparse_pallas` call: spins
+    stay in VMEM, counter noise is generated in-kernel at the shard's
+    global (chain, node) coordinates, and (optionally) CD moments
+    accumulate in the kernel's scratch.  Halo columns ride along in the
+    extended array but are excluded from every update mask, so they stay
+    frozen at the launch-boundary exchange values — exactly the staleness
+    the launch-resident `api.Sync` policies define.  Bands are contiguous
+    global id ranges, so a single scalar ``col0`` places the whole block
+    in the global noise grid.
+
+    Returns (m', noise_state') or, with ``measured``,
+    (m', noise_state', s_sum[N_loc], c_slots[D, N_ext]) — raw sums over
+    (chains × measured sweeps); ``c_slots[d, i] = Σ m_i·m_ext[idx[d, i]]``
+    with i ext-local (boundary edges read the frozen halo).
+    """
+    B, n_loc = m_loc.shape
+    H = halo_up.shape[1]
+    pad2 = 2 * H
+    m_ext = jnp.concatenate([m_loc, halo_up, halo_dn], axis=1)
+    zb = jnp.zeros((pad2,), bool)
+    zf = jnp.zeros((pad2,), jnp.float32)
+
+    def row(x):
+        return jnp.concatenate([jnp.asarray(x, jnp.float32), zf])
+
+    idx_e = jnp.pad(jnp.asarray(nbr_idx, jnp.int32), ((0, 0), (0, pad2)))
+    w_e = jnp.pad(jnp.asarray(nbr_w, jnp.float32), ((0, 0), (0, pad2)))
+    betas = jnp.asarray(betas, jnp.float32)
+    if betas.ndim == 1:
+        betas = jnp.broadcast_to(betas[:, None], (betas.shape[0], B))
+    cm_e = cv_e = None
+    if clamp_mask is not None and clamp_values is not None:
+        cm_e = jnp.concatenate([clamp_mask, zb])
+        cv_e = jnp.pad(jnp.asarray(clamp_values, jnp.float32),
+                       ((0, 0), (0, pad2)))
+    coords = jnp.stack([jnp.asarray(row0, jnp.uint32),
+                        jnp.asarray(col0, jnp.uint32)])
+    outs = sweep_sparse_pallas(
+        m_ext, idx_e, w_e, row(h), row(gain), row(off), row(rand_gain),
+        row(comp_off), jnp.concatenate([mask0, zb]),
+        jnp.concatenate([mask1, zb]), betas, noise_state,
+        clamp_mask=cm_e, clamp_values=cv_e, measured=measured,
+        coord_offset=coords, noise_mode="counter",
+        accumulate=measured is not None, block_b=block_b,
+        interpret=interpret)
+    m_out = outs[0][:, :n_loc]
+    if measured is None:
+        return m_out, outs[1]
+    return m_out, outs[1], outs[2][:n_loc], outs[3]

@@ -75,7 +75,7 @@ MAX_HIST_VISIBLE = 12  # one-hot reduction over 2^nv bins; keep it VMEM-sane
 def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
             noise_mode: str, has_clamp: bool, accumulate: bool,
             collect_hist: bool, decimation: int, sparse: bool, D: int,
-            NBp: int):
+            NBp: int, has_coords: bool):
     it = iter(refs)
     m0_ref = next(it)
     if sparse:
@@ -92,6 +92,7 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
     vis_ref = next(it) if collect_hist else None   # (1, NVp) visible cols
     pow_ref = next(it) if collect_hist else None   # (1, NVp) 2^k bin powers
     perm_ref = next(it) if noise_mode == NOISE_LFSR else None
+    coords_ref = next(it) if has_coords else None
     noise_in_ref = next(it)
     m_out_ref = next(it)
     noise_out_ref = next(it)
@@ -125,9 +126,15 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
     if noise_mode == NOISE_COUNTER:
         seed = noise_in_ref[0, 0]
         ctr0 = noise_in_ref[0, 1]
+        # (row0, col0) shift the hash coordinates to this block's place in
+        # the GLOBAL (chain, node) grid — the sharded engine passes its
+        # chain offset / first global node id so every shard regenerates
+        # exactly its columns of the single-device stream
+        row0 = coords_ref[0, 0] if has_coords else jnp.uint32(0)
+        col0 = coords_ref[0, 1] if has_coords else jnp.uint32(0)
         rows = (jax.lax.broadcasted_iota(jnp.uint32, (tb, Np), 0)
-                + (i * tb).astype(jnp.uint32))
-        cols = jax.lax.broadcasted_iota(jnp.uint32, (tb, Np), 1)
+                + (i * tb).astype(jnp.uint32) + row0)
+        cols = jax.lax.broadcasted_iota(jnp.uint32, (tb, Np), 1) + col0
         noise_carry0 = jnp.zeros((), jnp.uint32)  # unused
     else:
         noise_carry0 = noise_in_ref[...]          # (tb, Cp) LFSR states
@@ -221,6 +228,7 @@ def _launch(
     mask0, mask1, betas, noise_state, clamp_mask, clamp_values, measured,
     visible_idx, *, sparse, noise_mode, decimation, gather_perm,
     accumulate, collect_hist, n_visible, block_b, interpret,
+    coord_offset=None,
 ):
     """Shared plumbing for the dense and sparse sweep-resident engines."""
     B, N = m.shape
@@ -316,6 +324,15 @@ def _launch(
                      pl.BlockSpec((1, NVp), lambda i: (0, 0))]
         args += [visp, powp]
 
+    has_coords = coord_offset is not None
+    if has_coords:
+        if noise_mode != NOISE_COUNTER:
+            raise ValueError(
+                "coord_offset shifts the counter hash's (chain, node) "
+                "coordinates; the lfsr mode carries its cell band in the "
+                "state instead")
+        in_specs.append(pl.BlockSpec((1, 2), lambda i: (0, 0)))
+        args.append(jnp.asarray(coord_offset, jnp.uint32).reshape(1, 2))
     if noise_mode == NOISE_COUNTER:
         in_specs.append(pl.BlockSpec((1, 2), lambda i: (0, 0)))
         args.append(jnp.asarray(noise_state, jnp.uint32).reshape(1, 2))
@@ -366,7 +383,7 @@ def _launch(
             noise_mode=noise_mode, has_clamp=has_clamp,
             accumulate=accumulate, collect_hist=collect_hist,
             decimation=decimation, sparse=sparse,
-            D=D if sparse else 0, NBp=NBp),
+            D=D if sparse else 0, NBp=NBp, has_coords=has_coords),
         grid=(n_b,),
         in_specs=in_specs,
         out_specs=tuple(out_specs),
@@ -412,6 +429,7 @@ def sweep_fused_pallas(
     clamp_values: jax.Array | None = None,   # (B, N)
     measured: jax.Array | None = None,       # (S,) statistic weights, or None
     visible_idx: jax.Array | None = None,    # (n_visible,) histogram nodes
+    coord_offset: jax.Array | None = None,   # (2,) uint32 (row0, col0)
     *,
     noise_mode: str = NOISE_COUNTER,
     decimation: int = 8,
@@ -429,7 +447,10 @@ def sweep_fused_pallas(
     accumulated Gram matrix sum_meas m^T m — extract edge correlations as
     ``c_sum[e0, e1]``.  hist: (2^n_visible,) weighted counts of visible bit
     patterns (energy.empirical_visible_dist code order).  All need dividing
-    by their sample counts.
+    by their sample counts.  ``coord_offset`` (counter mode only) shifts
+    the in-kernel hash to global (chain, node) coordinates — the sharded
+    per-shard launch passes (chain0, node0) so each shard regenerates its
+    own columns of the single-device noise stream.
     """
     return _launch(
         m, W, None, None, h, gain, off, rand_gain, comp_off, mask0, mask1,
@@ -437,7 +458,7 @@ def sweep_fused_pallas(
         sparse=False, noise_mode=noise_mode, decimation=decimation,
         gather_perm=gather_perm, accumulate=accumulate,
         collect_hist=collect_hist, n_visible=n_visible, block_b=block_b,
-        interpret=interpret)
+        interpret=interpret, coord_offset=coord_offset)
 
 
 @functools.partial(
@@ -462,6 +483,7 @@ def sweep_sparse_pallas(
     clamp_values: jax.Array | None = None,
     measured: jax.Array | None = None,
     visible_idx: jax.Array | None = None,
+    coord_offset: jax.Array | None = None,
     *,
     noise_mode: str = NOISE_COUNTER,
     decimation: int = 8,
@@ -487,4 +509,4 @@ def sweep_sparse_pallas(
         sparse=True, noise_mode=noise_mode, decimation=decimation,
         gather_perm=gather_perm, accumulate=accumulate,
         collect_hist=collect_hist, n_visible=n_visible, block_b=block_b,
-        interpret=interpret)
+        interpret=interpret, coord_offset=coord_offset)

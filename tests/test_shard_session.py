@@ -97,7 +97,9 @@ def test_partition_validation_errors():
         _spec(g, mesh=mesh, partition=api.Partition(rows="rows")).validate()
     with pytest.raises(ValueError, match="counter"):
         _spec(g, mesh=mesh, noise="philox").validate()
-    with pytest.raises(ValueError, match="scan path"):
+    # fused_sparse needs a launch-resident sync policy (PR 5): under the
+    # default per-half-sweep barrier it still raises, with the new reason
+    with pytest.raises(ValueError, match="mid-launch"):
         _spec(g, mesh=mesh, backend="fused_sparse").validate()
     with pytest.raises(ValueError, match="disjoint"):
         _spec(g, mesh=mesh,
