@@ -608,7 +608,11 @@ def run(quick: bool = False) -> dict:
         # perf trajectory tracked across PRs at the repo root; --quick runs
         # (CI smoke) use incomparable shapes and must not overwrite it
         root = Path(__file__).resolve().parent.parent / "BENCH_kernel.json"
-        root.write_text(json.dumps(results, indent=1))
+        # merge-preserve: other benches own sections of this file (e.g.
+        # bench_variability's fault_yield) — only replace our own keys
+        merged = json.loads(root.read_text()) if root.exists() else {}
+        merged.update(results)
+        root.write_text(json.dumps(merged, indent=1))
     return results
 
 

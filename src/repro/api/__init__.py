@@ -15,6 +15,7 @@ See docs/api.md for the lifecycle and the old-call -> new-call migration
 table; `core.cd.PBitMachine.session(...)` builds specs/sessions from the
 familiar machine object.
 """
+from repro.api.faults import Faults, sample_faults
 from repro.api.spec import (
     BACKENDS,
     FUSED_BACKENDS,
@@ -45,6 +46,7 @@ __all__ = [
     "SPARSE_BACKENDS",
     "Schedule", "Constant", "Anneal", "Tempered",
     "Partition", "Sync", "SamplerSpec", "Session", "SessionState",
+    "Faults", "sample_faults",
     "program", "program_edges", "program_master",
     "dense_vmem_feasible", "resolve_backend", "resolve_interpret",
 ]

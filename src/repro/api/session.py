@@ -76,12 +76,77 @@ def _scale_chip(spec: SamplerSpec, chip: EffectiveChip) -> EffectiveChip:
     return dataclasses.replace(chip, **upd)
 
 
+def _saturate_edge_codes(spec: SamplerSpec, codes: jax.Array) -> jax.Array:
+    """Apply stuck-at-full-scale weight DACs to (E,) edge codes.
+
+    A saturated coupler drives ±127 regardless of the programmed code (sign
+    follows the requested code; + when zero).  Idempotent, so the dense
+    programming route may re-apply it at the (n, n) level harmlessly.
+    """
+    f = spec.faults
+    if f is None or not f.saturated_edges:
+        return codes
+    sat = np.asarray(f.saturated_edges, np.int64)
+    cur = codes[sat]
+    full = jnp.where(cur < 0, -127, 127).astype(codes.dtype)
+    return codes.at[sat].set(full)
+
+
+def _apply_code_faults(spec: SamplerSpec, J_codes: jax.Array,
+                       enable: jax.Array | None):
+    """Dense-codes view of the saturation fault (+ forced enable)."""
+    f = spec.faults
+    if f is None or not f.saturated_edges:
+        return J_codes, enable
+    e = spec.graph.edges
+    sat = np.asarray(f.saturated_edges, np.int64)
+    i, j = e[sat, 0], e[sat, 1]
+    J = jnp.asarray(J_codes)
+    full = jnp.where(J[i, j] < 0, -127, 127).astype(J.dtype)
+    J = J.at[i, j].set(full).at[j, i].set(full)
+    if enable is not None:
+        # the stuck DAC drives current whether or not the coupler was
+        # meant to be enabled
+        enable = jnp.asarray(enable).at[i, j].set(True).at[j, i].set(True)
+    return J, enable
+
+
+def _kill_dead_edges(spec: SamplerSpec, chip: EffectiveChip,
+                     tables) -> EffectiveChip:
+    """Open-circuit the dead couplers: zero coupling in both directions,
+    including the disabled-coupler leakage (a broken bond wire carries no
+    current at all).  Runs after programming/scaling so it is the last
+    word on those entries."""
+    f = spec.faults
+    if f is None or not f.dead_edges:
+        return chip
+    _, _, slot_ij, slot_ji = tables
+    e = spec.graph.edges
+    de = np.asarray(f.dead_edges, np.int64)
+    i, j = e[de, 0], e[de, 1]
+    upd = {}
+    if chip.W is not None:
+        upd["W"] = chip.W.at[i, j].set(0.0).at[j, i].set(0.0)
+    if chip.nbr_w is not None:
+        s_ij = np.asarray(slot_ij)[de]
+        s_ji = np.asarray(slot_ji)[de]
+        upd["nbr_w"] = (chip.nbr_w.at[s_ij, i].set(0.0)
+                        .at[s_ji, j].set(0.0))
+    return dataclasses.replace(chip, **upd) if upd else chip
+
+
 def program(spec: SamplerSpec, J_codes: jax.Array, h_codes: jax.Array,
             enable: jax.Array | None = None, *, tables=None
             ) -> EffectiveChip:
     """Program dense (n, n) symmetric 8-bit codes through the spec's
-    analog model (sparse-native specs gather the codes into slots)."""
-    nbr_idx, nbr_mask, _, _ = _graph_tables(spec, tables)
+    analog model (sparse-native specs gather the codes into slots).
+
+    The spec's `Faults` apply here: saturated couplers override their codes
+    with ±127 before the DAC transfer, dead couplers are open-circuited
+    after programming."""
+    tables = _graph_tables(spec, tables)
+    nbr_idx, nbr_mask, _, _ = tables
+    J_codes, enable = _apply_code_faults(spec, J_codes, enable)
     if enable is None:
         enable = jnp.abs(jnp.asarray(J_codes)) > 0
     if spec.sparse_native:
@@ -96,15 +161,16 @@ def program(spec: SamplerSpec, J_codes: jax.Array, h_codes: jax.Array,
         neighbors = jnp.asarray(nbr_idx) if spec.attach_sparse else None
         chip = program_weights(J_codes, h_codes, enable, spec.mismatch,
                                spec.hw, adjacency=adj, neighbors=neighbors)
-    return _scale_chip(spec, chip)
+    return _kill_dead_edges(spec, _scale_chip(spec, chip), tables)
 
 
 def program_edges(spec: SamplerSpec, J_edge_codes: jax.Array,
                   h_codes: jax.Array, *, tables=None) -> EffectiveChip:
     """Program per-edge codes (E,) — the CD master-weight layout."""
-    nbr_idx, nbr_mask, slot_ij, slot_ji = _graph_tables(spec, tables)
+    tables = _graph_tables(spec, tables)
+    nbr_idx, nbr_mask, slot_ij, slot_ji = tables
     e = spec.graph.edges
-    codes = jnp.asarray(J_edge_codes)
+    codes = _saturate_edge_codes(spec, jnp.asarray(J_edge_codes))
     if spec.sparse_native:
         D = nbr_idx.shape[0]
         n = spec.graph.n_nodes
@@ -114,7 +180,7 @@ def program_edges(spec: SamplerSpec, J_edge_codes: jax.Array,
         chip = program_weights_sparse(
             J_slots, h_codes, jnp.abs(J_slots) > 0, spec.mismatch,
             spec.hw, jnp.asarray(nbr_idx), jnp.asarray(nbr_mask))
-        return _scale_chip(spec, chip)
+        return _kill_dead_edges(spec, _scale_chip(spec, chip), tables)
     n = spec.graph.n_nodes
     J = (jnp.zeros((n, n), codes.dtype)
          .at[e[:, 0], e[:, 1]].set(codes)
@@ -149,18 +215,24 @@ class Session:
         nbr_idx, nbr_mask = g.neighbor_table()
         slot_ij, slot_ji = g.edge_slots(nbr_idx)
         self._nbr = (nbr_idx, nbr_mask, slot_ij, slot_ji)
+        self._fault_cm, self._fault_cv, self._alive_edges = \
+            self._compile_faults()
         self._noise_init, self._noise_step = self._make_noise()
+        self._flip_fn = self._make_flip_fn()
         self._engine = None
         if spec.mesh is not None:
             # multi-device execution: the partition plan, the sync-policy
             # launch loop, and the shard_map'd sweep live in
             # core/distributed.ShardedEngine; the closures below delegate
-            # to it with identical array contracts
+            # to it with identical array contracts (incl. the fault hooks:
+            # stuck spins ride the clamp path below, flips and stuck LFSR
+            # bits are regenerated per shard from global coordinates)
             from repro.core.distributed import ShardedEngine
             self._engine = ShardedEngine(
                 g, spec.mesh, spec.partitioning(), spec.noise,
                 spec.decimation, spec.chains, sync=spec.sync_policy(),
-                backend=self.backend, interpret=self.interpret)
+                backend=self.backend, interpret=self.interpret,
+                faults=spec.faults)
         self.default_betas = (
             None if spec.schedule is None
             else spec.schedule.betas(spec.chains))
@@ -176,15 +248,138 @@ class Session:
     # ------------------------------------------------------------------
     # construction helpers
     # ------------------------------------------------------------------
+    def _compile_faults(self):
+        """Static fault draw -> device arrays the closures close over.
+
+        Stuck-at-spin faults become a (N,) clamp mask + values merged into
+        every entry point's clamp arguments (the same machinery the CD
+        positive phase and the sharded frozen-column path use, which is
+        what makes the injection bit-exact across all backends).  Dead and
+        saturated couplers become the (E,) alive mask that gates the CD
+        gradient — their DACs cannot take an update.
+        """
+        f = self.spec.faults
+        n, n_edges = self.graph.n_nodes, self.graph.n_edges
+        cm = cv = alive = None
+        if f is not None and f.stuck_nodes:
+            cm_np = np.zeros((n,), bool)
+            cv_np = np.zeros((n,), np.float32)
+            cm_np[list(f.stuck_nodes)] = True
+            cv_np[list(f.stuck_nodes)] = np.asarray(f.stuck_values,
+                                                    np.float32)
+            cm, cv = jnp.asarray(cm_np), jnp.asarray(cv_np)
+        if f is not None and f.faulty_edges:
+            alive_np = np.ones((n_edges,), np.float32)
+            alive_np[list(f.faulty_edges)] = 0.0
+            alive = jnp.asarray(alive_np)
+        return cm, cv, alive
+
+    def _merge_faults(self, m, cm, cv):
+        """Fold the stuck-spin fault clamp into a caller's clamp args.
+
+        The stuck values are written into ``m`` up front, so a mask-only
+        (freeze-in-place) caller clamp stays mask-only; explicit caller
+        values are overridden at fault positions — a latched p-bit reads
+        its latched value even when driven by data.
+        """
+        fm, fv = self._fault_cm, self._fault_cv
+        if fm is None:
+            return m, cm, cv
+        m = jnp.where(fm, fv, m.astype(jnp.float32)).astype(m.dtype)
+        if cm is None:
+            return m, fm, None
+        cm2 = jnp.asarray(cm) | fm
+        if cv is None:
+            return m, cm2, None
+        return m, cm2, jnp.where(fm, fv, jnp.asarray(cv))
+
     def _make_noise(self) -> tuple[Callable, pbit.NoiseFn]:
         spec = self.spec
         if spec.noise == "lfsr":
-            return pbit.make_lfsr_noise(spec.graph, spec.chains,
-                                        spec.decimation)
+            init, step = pbit.make_lfsr_noise(spec.graph, spec.chains,
+                                              spec.decimation)
+            return self._wrap_lfsr_stuck(init, step)
         if spec.noise == "counter":
             return pbit.make_counter_noise(spec.chains, spec.graph.n_nodes)
         step = pbit.make_philox_noise(spec.chains, spec.graph.n_nodes)
         return (lambda key: key), step
+
+    def _wrap_lfsr_stuck(self, init0, step0):
+        """Degraded-RNG fault: force register bits of named per-cell LFSRs
+        to 0/1 after every decimated clock (and at seeding), then read the
+        uniforms from the forced state."""
+        f = self.spec.faults
+        if f is None or not f.lfsr_stuck:
+            return init0, step0
+        from repro.core import lfsr as lfsr_mod
+        n_cells = self.graph.n_nodes // 8
+        s0 = np.zeros((n_cells,), np.uint32)
+        s1 = np.zeros((n_cells,), np.uint32)
+        for cell, m0, m1 in f.lfsr_stuck:
+            if not 0 <= int(cell) < n_cells:
+                raise ValueError(
+                    f"lfsr_stuck cell {cell} out of range for "
+                    f"{n_cells} unit cells")
+            s0[int(cell)] |= np.uint32(m0)
+            s1[int(cell)] |= np.uint32(m1)
+        s0j, s1j = jnp.asarray(s0), jnp.asarray(s1)
+        perm = jnp.asarray(np.asarray(step0.spec.gather_perm))
+        dec = self.spec.decimation
+
+        def fix(state):
+            return (state & ~s0j) | s1j
+
+        def init(key):
+            return fix(init0(key))
+
+        def step(state):
+            st = fix(lfsr_mod.lfsr_step_n(state, dec))
+            u = jnp.take(lfsr_mod.flat_cell_uniforms(st), perm, axis=-1)
+            return st, u
+
+        step.spec = step0.spec
+        return init, step
+
+    def _make_flip_fn(self):
+        """Seeded transient-flip hook (api.Faults.flip_prob).
+
+        Draws from a stream *salted away from* the sampling noise —
+        counter noise XORs the seed, philox folds a constant into the key
+        — addressed by the pre-half-sweep noise state, so injecting flips
+        never perturbs the underlying Gibbs stream and the same fault draw
+        reproduces across backends (and across shards, which regenerate
+        the same hash from global (chain, node) coordinates).
+        """
+        from repro.api.faults import FLIP_FOLD, FLIP_SALT
+        f = self.spec.faults
+        if f is None or f.flip_prob <= 0.0:
+            return None
+        p = float(f.flip_prob)
+        if self.spec.noise == "counter":
+            from repro.core import lfsr as lfsr_mod
+            rows = jnp.arange(self.spec.chains, dtype=jnp.uint32)[:, None]
+            cols = jnp.arange(self.graph.n_nodes,
+                              dtype=jnp.uint32)[None, :]
+            thresh = jnp.uint32(round(p * 65536.0))
+            salt = jnp.uint32((int(f.flip_seed) ^ FLIP_SALT) & 0xFFFFFFFF)
+
+            def flip(ns0):
+                bits = lfsr_mod.counter_bits(ns0[0] ^ salt, ns0[1],
+                                             rows, cols)
+                return ((bits >> jnp.uint32(16))
+                        & jnp.uint32(0xFFFF)) < thresh
+
+            return flip
+        if self.spec.noise == "philox":
+            shape = (self.spec.chains, self.graph.n_nodes)
+            fold = (FLIP_FOLD ^ int(f.flip_seed)) & 0x7FFFFFFF
+
+            def flip(ns0):
+                return jax.random.bernoulli(
+                    jax.random.fold_in(ns0, fold), p, shape)
+
+            return flip
+        return None  # lfsr noise + flips rejected by spec validation
 
     def _fn(self, key, builder, *args):
         fn = self._fns.get(key)
@@ -264,13 +459,15 @@ class Session:
 
     def _build_sample(self, collect: bool, clamped: bool):
         def impl(chip, m, ns, betas, cm=None, cv=None):
+            m, cm, cv = self._merge_faults(m, cm, cv)
             if self._engine is not None:
                 return self._engine.sample(chip, m, ns, betas, cm, cv,
                                            collect)
             return pbit.gibbs_sample(
                 chip, self._color, m, betas, ns, self._noise_step,
                 clamp_mask=cm, clamp_values=cv, collect=collect,
-                backend=self.backend, interpret=self.interpret)
+                backend=self.backend, interpret=self.interpret,
+                flip_fn=self._flip_fn)
 
         if clamped:
             return jax.jit(impl)
@@ -300,6 +497,7 @@ class Session:
 
     def _build_stats(self, n_sweeps, burn_in, beta, clamped):
         def impl(chip, m, ns, cm=None, cv=None):
+            m, cm, cv = self._merge_faults(m, cm, cv)
             if self._engine is not None:
                 return self._engine.stats(chip, m, ns, beta, n_sweeps,
                                           burn_in, cm, cv)
@@ -307,7 +505,7 @@ class Session:
                 chip, self._color, m, beta, n_sweeps, burn_in, ns,
                 self._noise_step, self._edges, clamp_mask=cm,
                 clamp_values=cv, backend=self.backend,
-                interpret=self.interpret)
+                interpret=self.interpret, flip_fn=self._flip_fn)
 
         if clamped:
             return jax.jit(impl)
@@ -331,13 +529,16 @@ class Session:
 
     def _build_hist(self, visible_idx, burn_in):
         def impl(chip, m, ns, betas):
+            m, cm, cv = self._merge_faults(m, None, None)
             if self._engine is not None:
                 return self._engine.visible_hist(chip, m, ns, betas,
-                                                 burn_in, visible_idx)
+                                                 burn_in, visible_idx,
+                                                 cm, cv)
             return pbit.gibbs_visible_hist(
                 chip, self._color, m, betas, burn_in, ns, self._noise_step,
                 visible_idx, backend=self.backend,
-                interpret=self.interpret)
+                interpret=self.interpret, clamp_mask=cm, clamp_values=cv,
+                flip_fn=self._flip_fn)
 
         return jax.jit(impl)
 
@@ -384,7 +585,7 @@ class Session:
                 chip, self._color, m0, beta, n_sweeps, cfg.burn_in, ns,
                 self._noise_step, self._edges, clamp_mask=cm,
                 clamp_values=cv, backend=self.backend,
-                interpret=self.interpret)
+                interpret=self.interpret, flip_fn=self._flip_fn)
 
         @jax.jit
         def step(Jm, hm, data_vis, m, noise_state, vel):
@@ -393,30 +594,47 @@ class Session:
             clamp_values = jnp.zeros((cfg.chains, n), jnp.float32)
             clamp_values = clamp_values.at[:, vis].set(data_vis)
 
-            # positive phase: visibles pinned to data
+            # positive phase: visibles pinned to data (stuck p-bits win
+            # over the data drive — the latch reads its latched value)
+            m, pos_cm, pos_cv = self._merge_faults(m, clamp_mask,
+                                                   clamp_values)
             pos_s, pos_c, m_pos, noise_state = phase(
-                chip, m, cfg.pos_sweeps, noise_state, clamp_mask,
-                clamp_values)
+                chip, m, cfg.pos_sweeps, noise_state, pos_cm, pos_cv)
             # negative phase: CD-k from the positive-phase state, or from
             # the persistent chains (PCD)
             neg_init = m if cfg.persistent else m_pos
             neg_s, neg_c, m_neg, noise_state = phase(
-                chip, neg_init, cfg.cd_k, noise_state)
+                chip, neg_init, cfg.cd_k, noise_state, self._fault_cm,
+                None)
 
             gJ = pos_c - neg_c
             gh = pos_s - neg_s
+            if self._alive_edges is not None:
+                # dead/saturated couplers carry no reprogrammable DAC:
+                # their gradient is noise and would only corrupt momentum
+                gJ = gJ * self._alive_edges
+            # skip-and-log guard: a non-finite gradient (bad data batch,
+            # device fault) must never reach the master weights
+            ok = jnp.isfinite(gJ).all() & jnp.isfinite(gh).all()
             vel_J, vel_h = vel
-            vel_J = cfg.momentum * vel_J + gJ
-            vel_h = cfg.momentum * vel_h + gh
-            Jm = (1.0 - cfg.weight_decay) * Jm + cfg.lr * vel_J
-            hm = (1.0 - cfg.weight_decay) * hm \
-                + cfg.lr * cfg.h_lr_scale * vel_h
-            Jm = jnp.clip(Jm, WMIN, WMAX)
-            hm = jnp.clip(hm, WMIN, WMAX)
+            vel_J_new = cfg.momentum * vel_J + gJ
+            vel_h_new = cfg.momentum * vel_h + gh
+            Jm_new = (1.0 - cfg.weight_decay) * Jm + cfg.lr * vel_J_new
+            hm_new = (1.0 - cfg.weight_decay) * hm \
+                + cfg.lr * cfg.h_lr_scale * vel_h_new
+            Jm_new = jnp.clip(Jm_new, WMIN, WMAX)
+            hm_new = jnp.clip(hm_new, WMIN, WMAX)
+            Jm = jnp.where(ok, Jm_new, Jm)
+            hm = jnp.where(ok, hm_new, hm)
+            vel_J = jnp.where(ok, vel_J_new, vel_J)
+            vel_h = jnp.where(ok, vel_h_new, vel_h)
+            # the chains too: NaNs in m_neg would poison the next epoch
+            m_out = jnp.where(ok, m_neg, m)
             metrics = {
                 "corr_err": jnp.abs(pos_c - neg_c).mean(),
                 "mean_err": jnp.abs(pos_s - neg_s).mean(),
+                "update_skipped": 1.0 - ok.astype(jnp.float32),
             }
-            return Jm, hm, m_neg, noise_state, (vel_J, vel_h), metrics
+            return Jm, hm, m_out, noise_state, (vel_J, vel_h), metrics
 
         return step

@@ -52,6 +52,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.api.faults import Faults
 from repro.core.chimera import ChimeraGraph
 from repro.core.hardware import HardwareConfig, Mismatch, SparseMismatch
 
@@ -329,6 +330,7 @@ class SamplerSpec:
     mesh: Any = None            # jax.sharding.Mesh; None -> single device
     partition: Partition | None = None  # how to cut over mesh; None -> default
     sync: Sync | None = None    # shard sync policy; None -> Sync() barrier
+    faults: Faults | None = None  # discrete fault injection; None -> healthy
 
     # -- pytree ----------------------------------------------------------
     def tree_flatten(self):
@@ -401,6 +403,7 @@ class SamplerSpec:
         if self.schedule is not None:
             self.schedule.betas(self.chains)  # raises on ladder mismatch
         self._validate_partition()
+        self._validate_faults()
         return self
 
     def _validate_partition(self) -> None:
@@ -475,6 +478,23 @@ class SamplerSpec:
                 f"chains={self.chains} not divisible by the chain-axis "
                 f"size {n_chain}")
 
+    def _validate_faults(self) -> None:
+        f = self.faults
+        if f is None:
+            return
+        if not isinstance(f, Faults):
+            raise ValueError(
+                f"faults= must be an api.Faults instance, got "
+                f"{type(f).__name__}")
+        f.validate_for(self.graph, self.noise)
+        if f.needs_host_hooks and self.backend in FUSED_BACKENDS:
+            raise ValueError(
+                f"backend {self.backend!r} runs whole sweeps inside one "
+                f"kernel and cannot apply per-half-sweep fault hooks "
+                f"(transient flips, stuck LFSR bits); use a scan backend "
+                f"('ref'/'pallas'/'sparse') or backend='auto' (which "
+                f"demotes to the scan path under these faults)")
+
 
 # ---------------------------------------------------------------------------
 # Compile-time resolution (the ONLY place env vars are consulted)
@@ -505,6 +525,11 @@ def resolve_backend(spec: SamplerSpec) -> str:
         raise ValueError(
             f"backend {b!r} needs in-kernel noise ('counter' or 'lfsr'), "
             f"got {spec.noise!r}")
+    if b in FUSED_BACKENDS and _fault_hooks(spec):
+        raise ValueError(
+            f"backend {b!r} cannot apply per-half-sweep fault hooks "
+            f"(transient flips / stuck LFSR bits); unset "
+            f"REPRO_PBIT_BACKEND or pick a scan backend")
     if b in ("ref", "pallas", "fused") and spec.sparse_native:
         raise ValueError(
             f"REPRO_PBIT_BACKEND={b!r} cannot run a sparse-native spec "
@@ -522,7 +547,8 @@ def _resolve_sharded_backend(spec: SamplerSpec) -> str:
     to kill.
     """
     sync = spec.sync_policy()
-    fused_ok = spec.noise == "counter" and sync.kernel_fusible
+    fused_ok = (spec.noise == "counter" and sync.kernel_fusible
+                and not _fault_hooks(spec))
     b = spec.backend
     src = f"backend={b!r}"
     if b in (None, "auto"):
@@ -538,10 +564,10 @@ def _resolve_sharded_backend(spec: SamplerSpec) -> str:
         if not fused_ok:
             raise ValueError(
                 f"{src} names the fused per-shard kernel, but this sharded "
-                f"spec cannot run it (needs noise='counter' and a sync "
-                f"policy with no mid-launch halo exchanges; got noise="
-                f"{spec.noise!r}, sync={sync}); use 'sparse' or fix the "
-                f"sync policy")
+                f"spec cannot run it (needs noise='counter', a sync "
+                f"policy with no mid-launch halo exchanges, and no fault "
+                f"hooks; got noise={spec.noise!r}, sync={sync}, faults="
+                f"{spec.faults}); use 'sparse' or fix the spec")
         return b
     raise ValueError(
         f"{src} cannot run a mesh-sharded spec: the partitioned engine "
@@ -550,13 +576,22 @@ def _resolve_sharded_backend(spec: SamplerSpec) -> str:
         f"cannot halo-exchange")
 
 
+def _fault_hooks(spec: SamplerSpec) -> bool:
+    """Does the fault model need host-side per-half-sweep hooks?"""
+    return spec.faults is not None and spec.faults.needs_host_hooks
+
+
 def _auto_backend(spec: SamplerSpec) -> str:
-    """kernels.md policy: prefer the slot layout; fall back by VMEM model."""
+    """kernels.md policy: prefer the slot layout; fall back by VMEM model.
+
+    Fault hooks (transient flips, stuck LFSR bits) run between half-sweeps
+    on the host side of the scan, so they demote ``auto`` from the fused
+    engines to the matching scan backend.
+    """
+    in_kernel = spec.noise in IN_KERNEL_NOISE and not _fault_hooks(spec)
     if spec.has_slot_layout:
-        return ("fused_sparse" if spec.noise in IN_KERNEL_NOISE
-                else "sparse")
-    if spec.noise in IN_KERNEL_NOISE and \
-            dense_vmem_feasible(spec.graph.n_nodes):
+        return "fused_sparse" if in_kernel else "sparse"
+    if in_kernel and dense_vmem_feasible(spec.graph.n_nodes):
         return "fused"
     return "ref"
 

@@ -27,6 +27,7 @@ here are gone (see docs/api.md).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +35,7 @@ import numpy as np
 
 from repro import api
 from repro.core import energy as energy_mod
+from repro.runtime import fault_tolerance
 from repro.core import pbit
 from repro.core.chimera import ChimeraGraph
 from repro.core.hardware import (
@@ -73,6 +75,7 @@ class PBitMachine:
     mesh: object = None     # jax.sharding.Mesh -> multi-device sessions
     partition: object = None  # api.Partition; None -> rows over "data"
     sync: object = None     # api.Sync; None -> bit-exact barrier policy
+    faults: object = None   # api.Faults; None -> healthy chip
 
     @staticmethod
     def create(graph: ChimeraGraph, key: jax.Array,
@@ -134,6 +137,7 @@ class PBitMachine:
         kw.setdefault("mesh", self.mesh)
         kw.setdefault("partition", self.partition)
         kw.setdefault("sync", self.sync)
+        kw.setdefault("faults", self.faults)
         return api.SamplerSpec(
             graph=self.graph, hw=self.hw, mismatch=self.mismatch,
             noise=self.noise, backend=self.backend, schedule=schedule,
@@ -304,3 +308,169 @@ def train_cd(
                       f"corr_err={met_hist[-1]['corr_err']:.4f}")
     return CDResult(np.asarray(Jm), np.asarray(hm), kl_hist, met_hist,
                     edges=np.asarray(g.edges), n_nodes=n)
+
+
+# -- crash-safe training ---------------------------------------------------
+
+@dataclasses.dataclass
+class CDTrainState:
+    """Everything CD training needs to resume bit-exactly after a crash:
+    master weights, chain spins, the noise-generator state, optimizer
+    velocity and the epoch counter.  Per-epoch randomness is *derived*
+    (``fold_in(base_key, epoch)``), never threaded, so restoring this
+    state replays the exact uninterrupted trajectory."""
+
+    Jm: jax.Array
+    hm: jax.Array
+    m: jax.Array
+    noise_state: jax.Array
+    vel_J: jax.Array
+    vel_h: jax.Array
+    epoch: int = 0
+
+    def tree(self, base_key) -> dict:
+        """Checkpointable pytree (the epoch rides as the checkpoint step)."""
+        return {"Jm": self.Jm, "hm": self.hm, "m": self.m,
+                "noise_state": self.noise_state, "vel_J": self.vel_J,
+                "vel_h": self.vel_h, "base_key": jnp.asarray(base_key)}
+
+    @staticmethod
+    def from_tree(tree: dict, epoch: int) -> "CDTrainState":
+        return CDTrainState(
+            Jm=jnp.asarray(tree["Jm"]), hm=jnp.asarray(tree["hm"]),
+            m=jnp.asarray(tree["m"]),
+            noise_state=jnp.asarray(tree["noise_state"]),
+            vel_J=jnp.asarray(tree["vel_J"]),
+            vel_h=jnp.asarray(tree["vel_h"]), epoch=epoch)
+
+
+def _spec_fingerprint(machine: PBitMachine, cfg: CDConfig) -> dict:
+    """What must match for a resumed run to continue the same trajectory."""
+    return {"noise": machine.noise, "backend": machine.backend,
+            "chains": int(cfg.chains), "n_nodes": int(machine.graph.n_nodes),
+            "faults": repr(machine.faults)}
+
+
+def train_cd_resilient(
+    machine: PBitMachine,
+    visible_idx: np.ndarray,
+    target_dist: np.ndarray,
+    cfg: CDConfig,
+    key: jax.Array,
+    *,
+    ckpt_dir=None,
+    save_every: int = 10,
+    resume: bool = True,
+    eval_every: int = 10,
+    max_retries: int = 3,
+    backoff_s: float = 0.05,
+    watchdog=None,
+    on_epoch_start=None,
+    sleep=time.sleep,
+    verbose: bool = False,
+) -> CDResult:
+    """`train_cd` hardened for long unattended runs on faulty virtual chips.
+
+    Differences from the plain loop:
+      * all per-epoch randomness is ``fold_in``-derived from ``key``, so a
+        run resumed from a checkpoint is bit-identical to one that never
+        crashed (tests/test_resilience.py kills a training subprocess
+        mid-run and asserts equal master weights);
+      * every ``save_every`` epochs the full `CDTrainState` is committed
+        atomically via `repro.checkpoint` — with ``resume=True`` the loop
+        picks up from the latest complete checkpoint in ``ckpt_dir`` after
+        validating it came from the same spec (noise/backend/chains/faults);
+      * each epoch runs under `retry_step` (TransientError -> exponential
+        backoff) and feeds a `StragglerWatchdog` if one is passed;
+      * the jitted step's NaN/Inf guard reports via the ``update_skipped``
+        metric — skipped epochs leave the master weights untouched but
+        still advance the noise stream, keeping resume determinism.
+
+    ``on_epoch_start(epoch)`` is called inside the retried region — tests
+    use it to raise TransientError or to kill the process at a chosen
+    epoch.
+    """
+    g = machine.graph
+    n, nv = g.n_nodes, len(visible_idx)
+    session = machine.session(chains=cfg.chains)
+    step = session.make_cd_step(cfg, visible_idx)
+
+    base_key = jnp.asarray(key)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 0))
+    state = CDTrainState(
+        Jm=jnp.zeros((g.n_edges,), jnp.float32),
+        hm=jnp.zeros((n,), jnp.float32),
+        m=session.random_spins(k1),
+        noise_state=session.noise_state(k2),
+        vel_J=jnp.zeros((g.n_edges,), jnp.float32),
+        vel_h=jnp.zeros((n,), jnp.float32))
+    kl_hist, met_hist = [], []
+
+    ckpt_mod = None
+    if ckpt_dir is not None:
+        from repro.checkpoint import checkpoint as ckpt_mod
+        if resume and ckpt_mod.latest_step(ckpt_dir) is not None:
+            step_no, tree, extra = ckpt_mod.load(
+                ckpt_dir, target=state.tree(base_key))
+            fp, saved = _spec_fingerprint(machine, cfg), extra.get("spec", {})
+            for k_, v in fp.items():
+                if k_ in saved and saved[k_] != v:
+                    raise ValueError(
+                        f"checkpoint {ckpt_dir} was written by a different "
+                        f"run: {k_}={saved[k_]!r} != {v!r}")
+            if not np.array_equal(np.asarray(tree["base_key"]),
+                                  np.asarray(base_key)):
+                raise ValueError(
+                    f"checkpoint {ckpt_dir} was written under a different "
+                    "base key; resuming would fork the trajectory")
+            state = CDTrainState.from_tree(tree, step_no)
+            kl_hist = [tuple(x) for x in extra.get("kl_history", [])]
+            met_hist = list(extra.get("metric_history", []))
+            if verbose:
+                print(f"resumed from epoch {step_no}")
+
+    codes = energy_mod.all_states(nv)
+    k_data, k_eval = jax.random.fold_in(key, 1), jax.random.fold_in(key, 2)
+
+    def _save(epoch_done: int) -> None:
+        ckpt_mod.save(ckpt_dir, epoch_done, state.tree(base_key),
+                      extra={"kl_history": [list(x) for x in kl_hist],
+                             "metric_history": met_hist,
+                             "spec": _spec_fingerprint(machine, cfg)})
+
+    for epoch in range(state.epoch, cfg.epochs):
+        t0 = time.perf_counter()
+
+        def one_epoch():
+            if on_epoch_start is not None:
+                on_epoch_start(epoch)
+            idx = jax.random.choice(
+                jax.random.fold_in(k_data, epoch), codes.shape[0],
+                (cfg.chains,), p=jnp.asarray(target_dist))
+            data_vis = jnp.asarray(codes)[idx]
+            return step(state.Jm, state.hm, data_vis, state.m,
+                        state.noise_state, (state.vel_J, state.vel_h))
+
+        Jm, hm, m, noise_state, vel, metrics = fault_tolerance.retry_step(
+            one_epoch, max_retries=max_retries, backoff_s=backoff_s,
+            sleep=sleep)
+        state = CDTrainState(Jm, hm, m, noise_state, vel[0], vel[1],
+                             epoch + 1)
+        met_hist.append({k_: float(v) for k_, v in metrics.items()})
+        if met_hist[-1].get("update_skipped", 0.0) and verbose:
+            print(f"epoch {epoch+1:4d}  non-finite gradient: update skipped")
+        if watchdog is not None:
+            watchdog.observe(epoch, time.perf_counter() - t0)
+        if (epoch + 1) % eval_every == 0 or epoch == cfg.epochs - 1:
+            emp = sample_visible_dist(machine, state.Jm, state.hm,
+                                      visible_idx,
+                                      jax.random.fold_in(k_eval, epoch))
+            kl = energy_mod.kl_divergence(np.asarray(target_dist), emp)
+            kl_hist.append((epoch + 1, kl))
+            if verbose:
+                print(f"epoch {epoch+1:4d}  KL={kl:.4f}")
+        if ckpt_mod is not None and (
+                (epoch + 1) % save_every == 0 or epoch == cfg.epochs - 1):
+            _save(epoch + 1)
+    return CDResult(np.asarray(state.Jm), np.asarray(state.hm), kl_hist,
+                    met_hist, edges=np.asarray(g.edges), n_nodes=n)

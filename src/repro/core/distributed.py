@@ -283,7 +283,7 @@ class ShardedEngine:
     def __init__(self, graph: ChimeraGraph, mesh: Mesh, partition,
                  noise: str, decimation: int, chains: int, *,
                  sync=None, backend: str = "sparse",
-                 interpret: bool = True):
+                 interpret: bool = True, faults=None):
         if sync is None:
             from repro.api.spec import Sync
             sync = Sync()
@@ -294,6 +294,15 @@ class ShardedEngine:
         self.chains = chains
         self.sync = sync
         self.interpret = interpret
+        # discrete fault injection (api.Faults).  Stuck spins arrive as
+        # clamp args from the Session; what the engine itself owns are
+        # the per-half-sweep hooks, regenerated per shard from *global*
+        # coordinates so the sharded trajectory reproduces the
+        # single-device fault draw bit for bit under the barrier policy:
+        # transient flips (salted counter hash of global (chain, node))
+        # and stuck LFSR register bits (per-cell masks gathered into the
+        # shard's cell band).
+        self.faults = faults
         self._fused = backend == "fused_sparse"
         self.rows_axes = partition.rows_axes
         self.chain_axes = partition.chain_axes
@@ -331,6 +340,15 @@ class ShardedEngine:
             self._dev["lfsr_perm"] = jnp.asarray(p.lfsr_perm)
             self._cell_ids = jnp.asarray(p.cell_ids)
             self._cell_inv = jnp.asarray(p.cell_inv)
+            if faults is not None and faults.lfsr_stuck:
+                n_cells = graph.n_nodes // 8
+                s0 = np.zeros((n_cells,), np.uint32)
+                s1 = np.zeros((n_cells,), np.uint32)
+                for cell, m0, m1 in faults.lfsr_stuck:
+                    s0[int(cell)] |= np.uint32(m0)
+                    s1[int(cell)] |= np.uint32(m1)
+                self._dev["lfsr_s0"] = jnp.asarray(s0[p.cell_ids])
+                self._dev["lfsr_s1"] = jnp.asarray(s1[p.cell_ids])
         if self._fused:
             # per-edge slot row into the kernel's (D, N_ext) correlation
             # scratch: edge q of band b lives at c_slots[edge_slot[b, q],
@@ -354,6 +372,9 @@ class ShardedEngine:
         }
         if self.noise == "lfsr":
             specs["lfsr_perm"] = P(self._r, None)
+            if "lfsr_s0" in self._dev:
+                specs["lfsr_s0"] = P(self._r, None)
+                specs["lfsr_s1"] = P(self._r, None)
         if self._fused:
             specs["edge_slot"] = P(self._r, None)
         return specs
@@ -428,12 +449,38 @@ class ShardedEngine:
             return step
 
         perm = dev["lfsr_perm"][0]
+        s0 = dev["lfsr_s0"][0] if "lfsr_s0" in dev else None
+        s1 = dev["lfsr_s1"][0] if "lfsr_s1" in dev else None
 
         def step(st, chain0):
             st = lfsr_mod.lfsr_step_n(st, self.decimation)
+            if s0 is not None:
+                # stuck register bits (api.Faults.lfsr_stuck): forced
+                # after every decimated clock, before the read — same
+                # order as the Session's single-device wrapper
+                st = (st & ~s0) | s1
             u = jnp.take(lfsr_mod.flat_cell_uniforms(st), perm, axis=-1)
             return st, u
         return step
+
+    def _flip_step(self, dev):
+        """Transient-flip draw for this shard: Bernoulli(flip_prob) per
+        (chain, node) per half-sweep from a salted counter stream over
+        global coordinates (None when the fault model has no flips)."""
+        f = self.faults
+        if f is None or f.flip_prob <= 0.0:
+            return None
+        from repro.api.faults import FLIP_SALT
+        cols = dev["cols"][0][None, :]
+        thresh = jnp.uint32(round(float(f.flip_prob) * 65536.0))
+        salt = jnp.uint32((int(f.flip_seed) ^ FLIP_SALT) & 0xFFFFFFFF)
+
+        def flip(st, chain0):
+            rows = chain0 + jnp.arange(self.b_loc, dtype=jnp.uint32)
+            bits = lfsr_mod.counter_bits(st[0] ^ salt, st[1],
+                                         rows[:, None], cols)
+            return ((bits >> jnp.uint32(16)) & jnp.uint32(0xFFFF)) < thresh
+        return flip
 
     def _local_sweeps(self, clamped, collect, accumulate, hist_w):
         """The per-device launch loop.  Returns
@@ -489,6 +536,7 @@ class ShardedEngine:
                                      self.n_row)
 
             nstep = self._noise_step(dev)
+            fstep = self._flip_step(dev)
             w, h = chip["w"][0], chip["h"][0]
             gain, off = chip["gain"][0], chip["off"][0]
             rg, co = chip["rg"][0], chip["co"][0]
@@ -583,10 +631,14 @@ class ShardedEngine:
                         for c in (0, 1):
                             if 2 * s + c in ex_pts:
                                 hu, hd, pend = swap(m, hu, hd, pend)
+                            ns0 = ns
                             ns, u = nstep(ns, chain0)
                             m = halo_half_sweep(m, hu, hd, nbr, w, h,
                                                 gain, off, rg, co,
                                                 masks[c], beta_t, u)
+                            if fstep is not None:
+                                m = jnp.where(
+                                    masks[c] & fstep(ns0, chain0), -m, m)
                         if accumulate:
                             if k1_exact:
                                 # post-sweep refresh for boundary edges —
@@ -629,10 +681,14 @@ class ShardedEngine:
                     if clamped and cv is not None:
                         m = jnp.where(cm, cv, m)
                     for c in (0, 1):
+                        ns0 = ns
                         ns, u = nstep(ns, chain0)
                         m = halo_half_sweep(m, hu, hd, nbr, w, h, gain,
                                             off, rg, co, masks[c],
                                             beta_t, u)
+                        if fstep is not None:
+                            m = jnp.where(
+                                masks[c] & fstep(ns0, chain0), -m, m)
                     out = None
                     if accumulate or hist_w is not None:
                         accs2 = tuple(sweep_stats(m, hu, hd, xs_s[1],
@@ -768,7 +824,10 @@ class ShardedEngine:
         c = jnp.take(c_p.reshape(-1), self._edge_inv) / scale
         return s, c, self._m_global(m_o), self._ns_global(ns, ns_o)
 
-    def visible_hist(self, chip, m, ns, betas, burn_in, visible_idx):
+    def visible_hist(self, chip, m, ns, betas, burn_in, visible_idx,
+                     cm=None, cv=None):
+        clamped = cm is not None
+        has_cv = cv is not None
         visible_idx = np.asarray(visible_idx)
         nv = int(visible_idx.shape[0])
         p = self.plan
@@ -780,28 +839,41 @@ class ShardedEngine:
             vi[d, k] = v - p.node_starts[d]
             vw[d, k] = 2 ** k
         vi_j, vw_j = jnp.asarray(vi), jnp.asarray(vw)
-        run = self._local_sweeps(False, False, False, nv)
+        run = self._local_sweeps(clamped, False, False, nv)
         betas = jnp.asarray(betas, jnp.float32)
         n_sweeps = betas.shape[0]
         measured = (jnp.arange(n_sweeps) >= burn_in).astype(jnp.float32)
 
-        def local(dev, chipp, m_p, ns_p, betas, measured, vi_p, vw_p):
+        def local(dev, chipp, m_p, ns_p, betas, measured, vi_p, vw_p,
+                  *rest):
+            kw = {}
+            if clamped:
+                kw["cm"] = rest[0][0]
+                if has_cv:
+                    kw["cv"] = rest[1][0]
             ns_l = ns_p[0] if self.noise == "lfsr" else ns_p
             (m_o, ns_o, hist), _ = run(dev, chipp, m_p[0], ns_l, betas,
                                        measured, vis_idx=vi_p[0],
-                                       vis_w=vw_p[0])
+                                       vis_w=vw_p[0], **kw)
             if self.n_chain > 1:
                 hist = jax.lax.psum(hist, self._chain_name)
             return m_o[None], self._ns_out(ns_o), hist
 
         beta_spec = P() if betas.ndim == 1 else P(None, self._c)
-        in_specs = (self._dev_specs(), self._chip_specs(),
+        in_specs = [self._dev_specs(), self._chip_specs(),
                     P(self._r, self._c, None), self._ns_spec(), beta_spec,
-                    P(), P(self._r, None), P(self._r, None))
+                    P(), P(self._r, None), P(self._r, None)]
+        args = [self._dev, self._chip_parts(chip), self._m_parts(m),
+                self._ns_parts(ns), betas, measured, vi_j, vw_j]
+        if clamped:
+            in_specs.append(P(self._r, None))
+            args.append(self._part_cols(cm))
+            if has_cv:
+                in_specs.append(P(self._r, self._c, None))
+                args.append(self._m_parts(cv))
         out_specs = (P(self._r, self._c, None), self._ns_spec(), P())
-        m_o, ns_o, hist = self._shard_map(local, in_specs, out_specs)(
-            self._dev, self._chip_parts(chip), self._m_parts(m),
-            self._ns_parts(ns), betas, measured, vi_j, vw_j)
+        m_o, ns_o, hist = self._shard_map(
+            local, tuple(in_specs), out_specs)(*args)
         return hist, self._m_global(m_o), self._ns_global(ns, ns_o)
 
     # -- small helpers ---------------------------------------------------

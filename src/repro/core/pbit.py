@@ -215,12 +215,20 @@ def make_sweep_fn(
     clamp_mask: jax.Array | None = None,
     clamp_values: jax.Array | None = None,
     kernel: Callable | None = None,
+    flip_fn: Callable[[jax.Array], jax.Array] | None = None,
 ):
     """Build one full Gibbs sweep (two chromatic half-sweeps).
 
     clamp_mask: (N,) bool — nodes held at clamp_values (B, N) (CD positive
     phase).  `kernel`, if given, replaces the jnp half-sweep with the Pallas
     fused implementation (same signature, see kernels/ops.py).
+
+    flip_fn(noise_state) -> (B, N) bool is the transient-fault hook
+    (api.Faults.flip_prob): just-updated spins where it reads True are
+    inverted after their half-sweep.  It receives the noise state *before*
+    the half-sweep's draw, so the flip stream is addressed by the same
+    (seed, counter) coordinates as the sampling stream without consuming
+    it; clamped/stuck nodes never flip (the update mask gates it).
     """
     hs = kernel if kernel is not None else half_sweep
     masks = [(color == c) for c in (0, 1)]
@@ -232,8 +240,11 @@ def make_sweep_fn(
         if clamp_values is not None:
             m = jnp.where(clamp_mask, clamp_values, m)
         for mk in masks:
+            ns0 = ns
             ns, u = noise_fn(ns)
             m = hs(m, chip, mk, beta, u)
+            if flip_fn is not None:
+                m = jnp.where(mk & flip_fn(ns0), -m, m)
         return SweepCarry(m, ns)
 
     return sweep
@@ -267,6 +278,7 @@ def gibbs_sample(
     kernel: Callable | None = None,
     backend: str | None = None,
     interpret: bool | None = None,
+    flip_fn: Callable | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array | None]:
     """Run n_sweeps sweeps.  Returns (final_m, noise_state, traj|None).
 
@@ -283,8 +295,10 @@ def gibbs_sample(
     """
     backend = resolve_backend(backend)
     # an explicit kernel= always wins (custom half-sweep injection): the
-    # fused engine could not honor it, so fall through to the scan path
-    if backend in FUSED_BACKENDS and not collect and kernel is None:
+    # fused engine could not honor it, so fall through to the scan path —
+    # same for a flip_fn fault hook, which runs between half-sweeps
+    if backend in FUSED_BACKENDS and not collect and kernel is None \
+            and flip_fn is None:
         from repro.kernels import ops as kernel_ops
         m, ns = kernel_ops.fused_sweeps(
             init_m, chip, color, betas, noise_state,
@@ -294,7 +308,8 @@ def gibbs_sample(
         return m, ns, None
 
     sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
-                          _resolve_kernel(backend, kernel, interpret))
+                          _resolve_kernel(backend, kernel, interpret),
+                          flip_fn=flip_fn)
 
     def body(carry, beta):
         nxt = sweep(carry, beta)
@@ -320,6 +335,7 @@ def gibbs_stats(
     kernel: Callable | None = None,
     backend: str | None = None,
     interpret: bool | None = None,
+    flip_fn: Callable | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Accumulate first/second moments on-line (no trajectory storage).
 
@@ -336,7 +352,7 @@ def gibbs_stats(
     betas = jnp.full((n_sweeps,), beta, dtype=jnp.float32)
     denom = jnp.maximum(n_sweeps - burn_in, 1).astype(jnp.float32)
 
-    if backend in FUSED_BACKENDS and kernel is None:
+    if backend in FUSED_BACKENDS and kernel is None and flip_fn is None:
         from repro.kernels import ops as kernel_ops
         sparse = backend == "fused_sparse"
         measured = (jnp.arange(n_sweeps) >= burn_in).astype(jnp.float32)
@@ -355,7 +371,8 @@ def gibbs_stats(
         return s_sum / scale, c_edge / scale, m, ns
 
     sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
-                          _resolve_kernel(backend, kernel, interpret))
+                          _resolve_kernel(backend, kernel, interpret),
+                          flip_fn=flip_fn)
 
     def body(carry, inp):
         state, s_sum, c_sum = carry
@@ -388,6 +405,9 @@ def gibbs_visible_hist(
     visible_idx: np.ndarray,
     backend: str | None = None,
     interpret: bool | None = None,
+    clamp_mask: jax.Array | None = None,
+    clamp_values: jax.Array | None = None,
+    flip_fn: Callable | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Free-run and histogram the visible bit patterns, streaming.
 
@@ -397,6 +417,10 @@ def gibbs_visible_hist(
     histogram into the sweep loop; the fused backends accumulate it inside
     the kernel — either way the (sweeps, B, N) trajectory never
     materializes, unlike the old `gibbs_sample(collect=True)` route.
+
+    clamp_mask/clamp_values freeze nodes through the run (stuck-at-spin
+    faults; conditioned histograms) — the in-kernel histogram takes no
+    clamps, so a clamped (or flip-injected) call uses the scan path.
     """
     backend = resolve_backend(backend)
     visible_idx = np.asarray(visible_idx)
@@ -404,7 +428,7 @@ def gibbs_visible_hist(
     n_sweeps = betas.shape[0]
     measured = (jnp.arange(n_sweeps) >= burn_in).astype(jnp.float32)
 
-    if backend in FUSED_BACKENDS:
+    if backend in FUSED_BACKENDS and clamp_mask is None and flip_fn is None:
         from repro.kernels import ops as kernel_ops
         from repro.kernels.sweep_fused import MAX_HIST_VISIBLE
         spec = getattr(noise_fn, "spec", None)
@@ -418,8 +442,9 @@ def gibbs_visible_hist(
                 interpret=interpret)
             return hist, m, ns
 
-    sweep = make_sweep_fn(chip, color, noise_fn, None, None,
-                          _resolve_kernel(backend, None, interpret))
+    sweep = make_sweep_fn(chip, color, noise_fn, clamp_mask, clamp_values,
+                          _resolve_kernel(backend, None, interpret),
+                          flip_fn=flip_fn)
     vis = jnp.asarray(visible_idx)
     pow2 = jnp.asarray(2 ** np.arange(nv), jnp.int32)
 

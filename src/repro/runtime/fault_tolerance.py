@@ -93,7 +93,8 @@ class Heartbeat:
     @staticmethod
     def dead_hosts(directory: str | Path, timeout_s: float,
                    now: Optional[float] = None) -> list[int]:
-        now = now or time.time()
+        if now is None:   # `or` would treat an explicit now=0.0 as unset
+            now = time.time()
         dead = []
         for p in sorted(Path(directory).glob("host_*.alive")):
             t = json.loads(p.read_text())["t"]

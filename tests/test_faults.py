@@ -1,0 +1,306 @@
+"""Fault injection: `api.Faults` compiled into every backend.
+
+The contract under test (docs/robustness.md):
+
+  * the same `Faults` draw produces bit-identical spins and moments on
+    ref, sparse and fused_sparse for in-kernel noise (stuck/dead/
+    saturated faults), and on the scan backends for transient flips;
+  * stuck p-bits never move, dead couplers carry zero current in both
+    directions (no leakage), saturated couplers behave as if programmed
+    to full scale;
+  * unreprogrammable (dead + saturated) couplers are excluded from CD's
+    (E,) gradient, and non-finite gradients skip the update;
+  * in-situ CD still trains around stuck spins and dead couplers — the
+    paper's hardware-aware-learning claim extended to discrete faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import tasks
+from repro.core.cd import CDConfig, PBitMachine, train_cd
+from repro.core.chimera import make_chimera
+from repro.core.hardware import HardwareConfig
+
+FAULTS = api.Faults(stuck_nodes=(1, 6), stuck_values=(1, -1),
+                    dead_edges=(3,), saturated_edges=(9,))
+
+
+def _machine(noise="counter", backend="ref", faults=None, seed=0, hw=None):
+    g = make_chimera(1, 1)
+    return PBitMachine.create(g, jax.random.PRNGKey(seed),
+                              hw or HardwareConfig(), noise=noise,
+                              backend=backend, beta=1.0, w_scale=0.05,
+                              faults=faults)
+
+
+def _run(machine, n_sweeps=6, chains=8, seed=4, collect=False):
+    g = machine.graph
+    ses = machine.session(api.Constant(beta=1.0, n_sweeps=n_sweeps),
+                          chains=chains)
+    rng = np.random.default_rng(2)
+    Jm = jnp.asarray(rng.normal(0, 1.5, (g.n_edges,)), jnp.float32)
+    hm = jnp.asarray(rng.normal(0, 0.5, (g.n_nodes,)), jnp.float32)
+    chip = ses.program_master(Jm, hm)
+    m0 = ses.random_spins(jax.random.PRNGKey(seed))
+    ns = ses.noise_state(jax.random.PRNGKey(seed + 1))
+    return ses, ses.sample(chip, m0, ns, collect=collect)
+
+
+# -- validation ------------------------------------------------------------
+
+def test_faults_validation():
+    with pytest.raises(ValueError, match="pair up"):
+        api.Faults(stuck_nodes=(0,))
+    with pytest.raises(ValueError, match="±1"):
+        api.Faults(stuck_nodes=(0,), stuck_values=(2,))
+    with pytest.raises(ValueError, match="duplicates"):
+        api.Faults(stuck_nodes=(3, 3), stuck_values=(1, 1))
+    with pytest.raises(ValueError, match="dead_edges and"):
+        api.Faults(dead_edges=(1,), saturated_edges=(1,))
+    with pytest.raises(ValueError, match="flip_prob"):
+        api.Faults(flip_prob=1.0)
+    with pytest.raises(ValueError, match="overlap"):
+        api.Faults(lfsr_stuck=((0, 0b110, 0b010),))
+
+
+def test_faults_validated_against_graph_and_noise():
+    with pytest.raises(ValueError, match="out of range"):
+        _machine(faults=api.Faults(stuck_nodes=(99,), stuck_values=(1,))
+                 ).session()
+    with pytest.raises(ValueError, match="out of range"):
+        _machine(faults=api.Faults(dead_edges=(999,))).session()
+    with pytest.raises(ValueError, match="lfsr"):
+        _machine(noise="philox",
+                 faults=api.Faults(lfsr_stuck=((0, 1, 0),))).session()
+    with pytest.raises(ValueError, match="flip"):
+        _machine(noise="lfsr", faults=api.Faults(flip_prob=0.1)).session()
+    # host-hook faults cannot run on an explicitly fused backend
+    with pytest.raises(ValueError, match="fused"):
+        _machine(noise="counter", backend="fused",
+                 faults=api.Faults(flip_prob=0.1)).session()
+
+
+def test_sample_faults_is_deterministic_and_excludes():
+    g = make_chimera(1, 1)
+    f1 = api.sample_faults(5, g, stuck_rate=0.3, dead_rate=0.2,
+                           exclude_nodes=(0, 4))
+    f2 = api.sample_faults(5, g, stuck_rate=0.3, dead_rate=0.2,
+                           exclude_nodes=(0, 4))
+    assert f1 == f2
+    assert not ({0, 4} & set(f1.stuck_nodes))
+    assert not (set(f1.dead_edges) & set(f1.saturated_edges))
+
+
+# -- backend parity under one fault draw -----------------------------------
+
+def test_fault_parity_ref_sparse_fused_sparse():
+    """Identical Faults draw -> bit-identical spins on all backends."""
+    dense = _machine(noise="counter", backend="ref", faults=FAULTS)
+    twin = dense.to_sparse()                      # same chip, slot layout
+    fused = dataclasses.replace(twin, backend="fused_sparse")
+    _, (m_ref, ns_ref, _) = _run(dense)
+    _, (m_sp, ns_sp, _) = _run(twin)
+    _, (m_fs, ns_fs, _) = _run(fused)
+    np.testing.assert_array_equal(np.asarray(m_sp), np.asarray(m_ref))
+    np.testing.assert_array_equal(np.asarray(m_fs), np.asarray(m_ref))
+    np.testing.assert_array_equal(np.asarray(ns_sp), np.asarray(ns_ref))
+    np.testing.assert_array_equal(np.asarray(ns_fs), np.asarray(ns_ref))
+
+
+def test_fault_parity_moments():
+    """First/second moments also agree across the scan backends."""
+    dense = _machine(noise="counter", backend="ref", faults=FAULTS)
+    twin = dense.to_sparse()
+    outs = []
+    for mach in (dense, twin):
+        ses = mach.session(chains=8)
+        g = mach.graph
+        chip = ses.program_master(
+            jnp.ones((g.n_edges,), jnp.float32), jnp.zeros((g.n_nodes,)))
+        m0 = ses.random_spins(jax.random.PRNGKey(3))
+        ns = ses.noise_state(jax.random.PRNGKey(4))
+        mean_s, corr, m1, _ = ses.stats(chip, m0, ns, 12, 2)
+        outs.append((np.asarray(mean_s), np.asarray(corr), np.asarray(m1)))
+    np.testing.assert_array_equal(outs[0][2], outs[1][2])
+    np.testing.assert_allclose(outs[0][0], outs[1][0], rtol=0, atol=0)
+    np.testing.assert_allclose(outs[0][1], outs[1][1], rtol=0, atol=0)
+
+
+def test_flip_parity_scan_backends():
+    """Transient flips replay identically on ref and sparse (same salted
+    stream), and actually perturb the trajectory."""
+    f = api.Faults(flip_prob=0.2, flip_seed=11)
+    dense = _machine(noise="counter", backend="ref", faults=f)
+    twin = dense.to_sparse()
+    _, (m_ref, _, _) = _run(dense)
+    _, (m_sp, _, _) = _run(twin)
+    np.testing.assert_array_equal(np.asarray(m_sp), np.asarray(m_ref))
+    clean = _machine(noise="counter", backend="ref")
+    _, (m_clean, _, _) = _run(clean)
+    assert not np.array_equal(np.asarray(m_ref), np.asarray(m_clean))
+
+
+def test_flip_prob_demotes_fused_auto():
+    """auto + host-hook faults resolves to a scan backend, not fused."""
+    f = api.Faults(flip_prob=0.1)
+    mach = _machine(noise="counter", backend="auto", faults=f)
+    ses = mach.session()
+    assert ses.backend not in ("fused", "fused_sparse")
+
+
+# -- fault semantics -------------------------------------------------------
+
+def test_stuck_nodes_frozen_in_trajectory():
+    mach = _machine(faults=FAULTS)
+    _, (m, _, traj) = _run(mach, collect=True)
+    traj = np.asarray(traj)            # (S, B, N)
+    assert (traj[:, :, 1] == 1.0).all()
+    assert (traj[:, :, 6] == -1.0).all()
+    assert (np.asarray(m)[:, 1] == 1.0).all()
+    # healthy nodes still move
+    assert traj[:, :, 0].std() > 0
+
+
+def test_stuck_faults_merge_with_user_clamps():
+    """User clamps and fault clamps compose; faults win on their nodes."""
+    mach = _machine(faults=FAULTS)
+    ses = mach.session(api.Constant(beta=1.0, n_sweeps=5), chains=4)
+    g = mach.graph
+    chip = ses.program_master(jnp.zeros((g.n_edges,)), jnp.zeros((g.n_nodes,)))
+    m0 = ses.random_spins(jax.random.PRNGKey(0))
+    ns = ses.noise_state(jax.random.PRNGKey(1))
+    cm = jnp.zeros((g.n_nodes,), bool).at[0].set(True)
+    cv = jnp.zeros((4, g.n_nodes,), jnp.float32).at[:, 0].set(-1.0)
+    m, _, _ = ses.sample(chip, m0, ns, clamp_mask=cm, clamp_values=cv)
+    m = np.asarray(m)
+    assert (m[:, 0] == -1.0).all()     # user clamp honored
+    assert (m[:, 1] == 1.0).all()      # fault clamp honored alongside
+
+
+def test_dead_coupler_is_open_circuit():
+    mach = _machine(faults=FAULTS, hw=HardwareConfig.ideal())
+    g = mach.graph
+    codes = jnp.full((g.n_edges,), 40, jnp.int32)
+    chip = mach.program_edges(codes, jnp.zeros((g.n_nodes,), jnp.int32))
+    i, j = g.edges[3]
+    W = np.asarray(chip.W)
+    assert W[i, j] == 0.0 and W[j, i] == 0.0
+    # the slot view agrees (sparse backends read nbr_w, not W)
+    nbr_idx, _, slot_ij, slot_ji = mach.neighbor_tables()
+    assert np.asarray(chip.nbr_w)[np.asarray(slot_ij)[3], i] == 0.0
+    assert np.asarray(chip.nbr_w)[np.asarray(slot_ji)[3], j] == 0.0
+    # a healthy edge with the same code is very much alive
+    a, b = g.edges[0]
+    assert W[a, b] != 0.0
+
+
+def test_saturated_coupler_is_full_scale():
+    faults = api.Faults(saturated_edges=(9,))
+    mach = _machine(faults=faults, hw=HardwareConfig.ideal())
+    g = mach.graph
+    codes = jnp.full((g.n_edges,), -5, jnp.int32)
+    chip = mach.program_edges(codes, jnp.zeros((g.n_nodes,), jnp.int32))
+    ref = _machine(hw=HardwareConfig.ideal())
+    chip_full = ref.program_edges(
+        jnp.asarray(codes).at[9].set(-127),
+        jnp.zeros((g.n_nodes,), jnp.int32))
+    i, j = g.edges[9]
+    np.testing.assert_array_equal(np.asarray(chip.W)[i, j],
+                                  np.asarray(chip_full.W)[i, j])
+    # zero requested code saturates positive (sign convention)
+    chip0 = mach.program_edges(jnp.zeros((g.n_edges,), jnp.int32),
+                               jnp.zeros((g.n_nodes,), jnp.int32))
+    chip127 = ref.program_edges(
+        jnp.zeros((g.n_edges,), jnp.int32).at[9].set(127),
+        jnp.zeros((g.n_nodes,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(chip0.W)[i, j],
+                                  np.asarray(chip127.W)[i, j])
+
+
+def test_lfsr_stuck_bits_hold():
+    stuck0, stuck1 = 0b1010, 0b0101
+    f = api.Faults(lfsr_stuck=((0, stuck0, stuck1),))
+    mach = _machine(noise="lfsr", backend="ref", faults=f)
+    _, (_, ns, _) = _run(mach)
+    st = np.asarray(ns)                # (B, n_cells) uint32
+    assert (st[:, 0] & stuck0).max() == 0
+    assert (st[:, 0] & stuck1 == stuck1).all()
+    # other cells untouched by the mask (statistically: some bit varies)
+    assert st[:, 0].std() > 0 or st.shape[0] == 1
+
+
+# -- CD under faults -------------------------------------------------------
+
+def _cd_setup(faults, chains=16):
+    g = make_chimera(1, 1)
+    task = tasks.and_gate_task(g)
+    mach = PBitMachine.create(g, jax.random.PRNGKey(1), HardwareConfig(),
+                              noise="counter", faults=faults)
+    cfg = CDConfig(epochs=3, chains=chains, cd_k=3, pos_sweeps=3, burn_in=1)
+    ses = mach.session(chains=chains)
+    step = ses.make_cd_step(cfg, task.visible_idx)
+    Jm = jnp.zeros((g.n_edges,), jnp.float32)
+    hm = jnp.zeros((g.n_nodes,), jnp.float32)
+    m = ses.random_spins(jax.random.PRNGKey(2))
+    ns = ses.noise_state(jax.random.PRNGKey(3))
+    vel = (jnp.zeros_like(Jm), jnp.zeros_like(hm))
+    data = jnp.asarray(
+        np.sign(np.random.default_rng(0).normal(
+            size=(chains, len(task.visible_idx)))).astype(np.float32))
+    return step, Jm, hm, m, ns, vel, data
+
+
+def test_faulty_couplers_excluded_from_cd_gradient():
+    step, Jm, hm, m, ns, vel, data = _cd_setup(FAULTS)
+    for _ in range(3):
+        Jm, hm, m, ns, vel, metrics = step(Jm, hm, data, m, ns, vel)
+    Jm = np.asarray(Jm)
+    assert Jm[3] == 0.0 and Jm[9] == 0.0     # dead + saturated: never updated
+    assert np.abs(Jm).sum() > 0.0            # the rest learned something
+    assert float(metrics["update_skipped"]) == 0.0
+
+
+def test_nonfinite_gradient_skips_update():
+    step, Jm, hm, m, ns, vel, data = _cd_setup(FAULTS)
+    Jm1, hm1, m1, ns1, vel1, _ = step(Jm, hm, data, m, ns, vel)
+    bad = data.at[:, 0].set(jnp.nan)
+    Jm2, hm2, m2, _, vel2, metrics = step(Jm1, hm1, bad, m1, ns1, vel1)
+    assert float(metrics["update_skipped"]) == 1.0
+    np.testing.assert_array_equal(np.asarray(Jm2), np.asarray(Jm1))
+    np.testing.assert_array_equal(np.asarray(hm2), np.asarray(hm1))
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(m1))
+    assert np.isfinite(np.asarray(vel2[0])).all()
+    assert np.isfinite(np.asarray(vel2[1])).all()
+
+
+# -- acceptance: CD trains around faults (ISSUE acceptance criterion) ------
+
+def test_cd_recovers_with_stuck_and_dead():
+    """2x2-Chimera chip with a stuck hidden p-bit and a dead coupler still
+    reaches the target KL through in-situ learning."""
+    g = make_chimera(2, 2)
+    task = tasks.and_gate_task(g)
+    vis = set(int(i) for i in task.visible_idx)
+    stuck = next(i for i in range(g.n_nodes)
+                 if i not in vis and i >= 8)      # hidden node, off-cell
+    # kill a coupler not touching the visible nodes
+    dead = next(q for q, (a, b) in enumerate(np.asarray(g.edges))
+                if a not in vis and b not in vis)
+    faults = api.Faults(stuck_nodes=(stuck,), stuck_values=(1,),
+                        dead_edges=(dead,))
+    mach = PBitMachine.create(g, jax.random.PRNGKey(42), HardwareConfig(),
+                              noise="counter", faults=faults)
+    cfg = CDConfig(lr=6.0, cd_k=15, pos_sweeps=15, burn_in=3,
+                   chains=256, epochs=50)
+    res = train_cd(mach, task.visible_idx, task.target_dist, cfg,
+                   jax.random.PRNGKey(7), eval_every=cfg.epochs)
+    kl = res.kl_history[-1][1]
+    assert kl < 0.35, f"faulty chip failed to train: KL={kl:.3f}"
+    assert np.asarray(res.J_edges)[dead] == 0.0

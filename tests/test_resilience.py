@@ -1,0 +1,308 @@
+"""Crash-safe CD training + fault-tolerance runtime pieces.
+
+The headline contract (ISSUE acceptance): a training run that is KILLED
+mid-flight and resumed from its latest checkpoint produces bit-identical
+master weights to a run that never crashed.  `train_cd_resilient` makes
+that hold by deriving all per-epoch randomness via fold_in from a base
+key and checkpointing the full `CDTrainState` atomically.
+
+Also covered: the Heartbeat now=0.0 regression, retry_step backoff,
+StragglerWatchdog, resume-under-changed-spec rejection, and (in a forced
+2-device subprocess) stuck-spin + transient-flip parity through the
+sharded halo-exchange engine.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import tasks
+from repro.core.cd import (CDConfig, PBitMachine, train_cd_resilient)
+from repro.core.chimera import make_chimera
+from repro.core.hardware import HardwareConfig
+from repro.runtime.fault_tolerance import (
+    Heartbeat,
+    StragglerWatchdog,
+    TransientError,
+    retry_step,
+)
+
+ROOT = Path(__file__).resolve().parent.parent
+SUBPROC_ENV = {"PYTHONPATH": f"{ROOT}/src", "PATH": "/usr/bin:/bin",
+               "HOME": "/root", "JAX_PLATFORMS": "cpu"}
+
+FAULTS = api.Faults(stuck_nodes=(5,), stuck_values=(-1,), dead_edges=(2,))
+
+
+def _quick_cfg(epochs=6):
+    return CDConfig(epochs=epochs, chains=32, cd_k=3, pos_sweeps=3,
+                    burn_in=1)
+
+
+def _machine(seed=42, **kw):
+    g = make_chimera(1, 1)
+    kw.setdefault("noise", "counter")
+    kw.setdefault("faults", FAULTS)
+    return PBitMachine.create(g, jax.random.PRNGKey(seed),
+                              HardwareConfig(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# runtime primitives
+# ---------------------------------------------------------------------------
+def test_heartbeat_dead_hosts_honors_explicit_time_zero(tmp_path):
+    """now=0.0 is a legitimate clock value, not "use wall time".
+
+    Regression: `now = now or time.time()` treated an explicit 0.0 as
+    unset and substituted the wall clock, declaring every host dead in
+    any test or sim that runs on a relative clock starting at 0.
+    """
+    hb = Heartbeat(tmp_path, host_id=0)
+    hb.path.write_text(json.dumps({"step": 1, "t": -10.0}))
+    assert Heartbeat.dead_hosts(tmp_path, timeout_s=50.0, now=0.0) == []
+    assert Heartbeat.dead_hosts(tmp_path, timeout_s=5.0, now=0.0) == [0]
+
+
+def test_retry_step_backoff_and_permanent():
+    sleeps, calls = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientError("link flap")
+        return "ok"
+
+    assert retry_step(flaky, max_retries=3, backoff_s=0.1,
+                      sleep=sleeps.append) == "ok"
+    assert sleeps == [0.1, 0.2]          # exponential backoff
+
+    def always():
+        raise TransientError("dead")
+
+    out = retry_step(always, max_retries=2, backoff_s=0.0,
+                     on_permanent=lambda e: "fallback", sleep=lambda s: None)
+    assert out == "fallback"
+    with pytest.raises(TransientError):
+        retry_step(always, max_retries=1, backoff_s=0.0,
+                   sleep=lambda s: None)
+
+
+def test_straggler_watchdog_flags_slow_step():
+    flagged = []
+    wd = StragglerWatchdog(threshold=2.0, warmup=3,
+                           on_straggler=lambda s, dt, ema: flagged.append(s))
+    for step in range(5):
+        assert not wd.observe(step, 1.0)
+    assert wd.observe(5, 10.0)
+    assert flagged == [5]
+    assert [s for s, _ in wd.flagged] == [5]
+
+
+# ---------------------------------------------------------------------------
+# crash-safe training (in-process)
+# ---------------------------------------------------------------------------
+def test_resume_matches_uninterrupted(tmp_path):
+    task = tasks.and_gate_task(make_chimera(1, 1))
+    cfg = _quick_cfg()
+    key = jax.random.PRNGKey(7)
+    r_full = train_cd_resilient(_machine(), task.visible_idx,
+                                task.target_dist, cfg, key,
+                                ckpt_dir=tmp_path / "a", save_every=2,
+                                eval_every=cfg.epochs)
+    # second run resumes from the epoch-4 checkpoint (delete the final one)
+    import shutil
+    src, dst = tmp_path / "a", tmp_path / "b"
+    shutil.copytree(src, dst)
+    shutil.rmtree(dst / f"step_{cfg.epochs:09d}")
+    r_res = train_cd_resilient(_machine(), task.visible_idx,
+                               task.target_dist, cfg, key,
+                               ckpt_dir=dst, save_every=2,
+                               eval_every=cfg.epochs)
+    np.testing.assert_array_equal(r_res.J_edges, r_full.J_edges)
+    np.testing.assert_array_equal(r_res.hm, r_full.hm)
+    assert r_res.kl_history == r_full.kl_history
+
+
+def test_transient_errors_inside_training_are_retried():
+    task = tasks.and_gate_task(make_chimera(1, 1))
+    cfg = _quick_cfg(epochs=3)
+    key = jax.random.PRNGKey(7)
+    clean = train_cd_resilient(_machine(), task.visible_idx,
+                               task.target_dist, cfg, key,
+                               eval_every=cfg.epochs)
+    fails = {"left": 2}
+
+    def hiccup(epoch):
+        if epoch == 1 and fails["left"]:
+            fails["left"] -= 1
+            raise TransientError("simulated preemption")
+
+    noisy = train_cd_resilient(_machine(), task.visible_idx,
+                               task.target_dist, cfg, key,
+                               on_epoch_start=hiccup, backoff_s=0.0,
+                               sleep=lambda s: None,
+                               eval_every=cfg.epochs)
+    assert fails["left"] == 0
+    np.testing.assert_array_equal(noisy.J_edges, clean.J_edges)
+
+
+def test_watchdog_observes_every_epoch():
+    task = tasks.and_gate_task(make_chimera(1, 1))
+    cfg = _quick_cfg(epochs=3)
+    wd = StragglerWatchdog(threshold=100.0, warmup=1)
+    train_cd_resilient(_machine(), task.visible_idx, task.target_dist, cfg,
+                       jax.random.PRNGKey(7), watchdog=wd,
+                       eval_every=cfg.epochs)
+    assert wd.ewma is not None and wd.flagged == []
+
+
+def test_resume_rejects_foreign_checkpoint(tmp_path):
+    task = tasks.and_gate_task(make_chimera(1, 1))
+    cfg = _quick_cfg(epochs=2)
+    train_cd_resilient(_machine(), task.visible_idx, task.target_dist, cfg,
+                       jax.random.PRNGKey(7), ckpt_dir=tmp_path,
+                       save_every=1, eval_every=cfg.epochs)
+    with pytest.raises(ValueError, match="different run"):
+        train_cd_resilient(_machine(noise="philox"), task.visible_idx,
+                           task.target_dist, cfg, jax.random.PRNGKey(7),
+                           ckpt_dir=tmp_path, eval_every=cfg.epochs)
+    with pytest.raises(ValueError, match="base key"):
+        train_cd_resilient(_machine(), task.visible_idx, task.target_dist,
+                           cfg, jax.random.PRNGKey(8), ckpt_dir=tmp_path,
+                           eval_every=cfg.epochs)
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume (subprocess): the ISSUE acceptance criterion
+# ---------------------------------------------------------------------------
+_TRAIN_SCRIPT = """
+    import json, os, sys
+    import jax
+    import numpy as np
+    from repro import api
+    from repro.core import tasks
+    from repro.core.cd import CDConfig, PBitMachine, train_cd_resilient
+    from repro.core.chimera import make_chimera
+    from repro.core.hardware import HardwareConfig
+
+    ckpt_dir = sys.argv[1]
+    kill_at = int(sys.argv[2])      # -1: run to completion
+
+    g = make_chimera(1, 1)
+    task = tasks.and_gate_task(g)
+    faults = api.Faults(stuck_nodes=(5,), stuck_values=(-1,),
+                        dead_edges=(2,))
+    machine = PBitMachine.create(g, jax.random.PRNGKey(42),
+                                 HardwareConfig(), noise="counter",
+                                 faults=faults)
+    cfg = CDConfig(epochs=10, chains=32, cd_k=3, pos_sweeps=3, burn_in=1)
+
+    def maybe_kill(epoch):
+        if kill_at >= 0 and epoch == kill_at:
+            os._exit(3)             # hard kill: no cleanup, no final save
+
+    res = train_cd_resilient(machine, task.visible_idx, task.target_dist,
+                             cfg, jax.random.PRNGKey(7), ckpt_dir=ckpt_dir,
+                             save_every=3, eval_every=cfg.epochs,
+                             on_epoch_start=maybe_kill)
+    print(json.dumps({"J": np.asarray(res.J_edges).tolist(),
+                      "h": np.asarray(res.hm).tolist(),
+                      "kl": res.kl_history[-1][1]}))
+"""
+
+
+def _run_train(ckpt_dir, kill_at, timeout=540):
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_TRAIN_SCRIPT),
+         str(ckpt_dir), str(kill_at)],
+        capture_output=True, text=True, timeout=timeout, env=SUBPROC_ENV,
+        cwd=ROOT)
+    return out
+
+
+def test_kill_and_resume_bit_identical(tmp_path):
+    """Kill training at epoch 7 (after the epoch-6 checkpoint), resume,
+    and require master weights bit-identical to the uninterrupted run."""
+    clean = _run_train(tmp_path / "clean", kill_at=-1)
+    assert clean.returncode == 0, clean.stderr[-3000:]
+    ref = json.loads(clean.stdout.strip().splitlines()[-1])
+
+    killed = _run_train(tmp_path / "crash", kill_at=7)
+    assert killed.returncode == 3          # died mid-run, as instructed
+    from repro.checkpoint import checkpoint as ckpt
+    assert ckpt.latest_step(tmp_path / "crash") == 6
+
+    resumed = _run_train(tmp_path / "crash", kill_at=-1)
+    assert resumed.returncode == 0, resumed.stderr[-3000:]
+    got = json.loads(resumed.stdout.strip().splitlines()[-1])
+    assert got["J"] == ref["J"]
+    assert got["h"] == ref["h"]
+    assert got["kl"] == ref["kl"]
+
+
+# ---------------------------------------------------------------------------
+# faults through the sharded engine (forced 2-device subprocess)
+# ---------------------------------------------------------------------------
+_SHARDED_FAULTS_SCRIPT = """
+    import jax, json
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import api
+    from repro.core.cd import PBitMachine
+    from repro.core.chimera import make_chimera
+    from repro.core.hardware import HardwareConfig
+
+    g = make_chimera(2, 2)
+    faults = api.Faults(stuck_nodes=(3, 17), stuck_values=(1, -1),
+                        dead_edges=(5,), flip_prob=0.15, flip_seed=9)
+    mach = PBitMachine.create(g, jax.random.PRNGKey(0), HardwareConfig(),
+                              noise="counter", backend="sparse",
+                              faults=faults)
+    B, S = 8, 6
+    mesh = jax.make_mesh((2,), ("data",))
+    ses0 = api.Session(mach.sampler_spec(chains=B))
+    ses1 = api.Session(mach.sampler_spec(
+        chains=B, mesh=mesh, partition=api.Partition(rows="data")))
+    rng = np.random.default_rng(1)
+    codes = jnp.asarray(rng.integers(-50, 50, g.n_edges), jnp.int32)
+    h = jnp.asarray(rng.integers(-10, 10, g.n_nodes), jnp.int32)
+    chip = ses0.program_edges(codes, h)
+    m0 = ses0.random_spins(jax.random.PRNGKey(2))
+    ns = ses0.noise_state(jax.random.PRNGKey(3))
+    betas = jnp.linspace(0.3, 1.5, S)
+    m_a, ns_a, tr_a = ses0.sample(chip, m0, ns, betas, collect=True)
+    m_b, ns_b, tr_b = ses1.sample(chip, m0, ns, betas, collect=True)
+    tr_a, tr_b = np.asarray(tr_a), np.asarray(tr_b)
+    print(json.dumps({
+        "n_dev": jax.device_count(),
+        "spins_equal": bool(np.array_equal(np.asarray(m_a),
+                                           np.asarray(m_b))),
+        "traj_equal": bool(np.array_equal(tr_a, tr_b)),
+        "stuck_held": bool((tr_b[:, :, 3] == 1.0).all()
+                           and (tr_b[:, :, 17] == -1.0).all()),
+        "flips_active": bool(tr_a.std() > 0),
+    }))
+"""
+
+
+def test_sharded_faults_bit_exact_two_devices(tmp_path):
+    head = ("import os\nos.environ['XLA_FLAGS'] = "
+            "'--xla_force_host_platform_device_count=2'\n")
+    out = subprocess.run(
+        [sys.executable, "-c", head + textwrap.dedent(_SHARDED_FAULTS_SCRIPT)],
+        capture_output=True, text=True, timeout=540, env=SUBPROC_ENV,
+        cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["n_dev"] == 2
+    assert got["spins_equal"] and got["traj_equal"]
+    assert got["stuck_held"] and got["flips_active"]
