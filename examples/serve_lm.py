@@ -1,5 +1,9 @@
-"""Serving example: batched prefill + decode (thin wrapper over the
-production driver, repro/launch/serve.py).
+"""LANGUAGE-MODEL serving example: batched prefill + decode for a
+decoder-only transformer (thin wrapper over the LM demo driver,
+repro/launch/serve.py).
+
+Not the p-bit sampling service — that is `python -m repro.serve`
+(see docs/serving.md and examples/serve_pbit.py).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """

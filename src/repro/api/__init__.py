@@ -32,6 +32,7 @@ from repro.api.spec import (
     dense_vmem_feasible,
     resolve_backend,
     resolve_interpret,
+    spec_fingerprint,
 )
 from repro.api.session import (
     Session,
@@ -49,4 +50,5 @@ __all__ = [
     "Faults", "sample_faults",
     "program", "program_edges", "program_master",
     "dense_vmem_feasible", "resolve_backend", "resolve_interpret",
+    "spec_fingerprint",
 ]

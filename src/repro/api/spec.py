@@ -373,6 +373,69 @@ class SamplerSpec:
             return None
         return self.sync if self.sync is not None else Sync()
 
+    # -- compile-cache fingerprint ---------------------------------------
+    def fingerprint(self) -> tuple:
+        """Canonicalized compile-cache key for this spec (hashable tuple).
+
+        Two specs with equal fingerprints compile to interchangeable
+        Sessions: the *resolved* backend/interpret (so ``backend="auto"``
+        and the explicit name it resolves to share an entry), the graph
+        shape bucket (rows/cols/k/mask — node ids and edge lists are
+        derived from these deterministically), the effective partition +
+        sync + mesh device assignment, the schedule/chains/beta/decimation
+        statics, and a value digest of the hw constants and mismatch
+        arrays (they are baked into the jitted closures as constants, so
+        a shape-only key would alias distinct executables).  The serving
+        layer (`repro.serve`) keys its LRU Session cache on this: a
+        13-spin adder and a 440-spin chip embedded into the same shape
+        bucket — same bucket graph, same bucket mismatch — hit the same
+        compiled executable and differ only in the programmed chip
+        arguments.  Env vars are consulted exactly as Session compile
+        would (via `resolve_backend`/`resolve_interpret`), so the key is
+        computed in the same environment the Session is built in.
+        """
+        import hashlib
+
+        g = self.graph
+        graph_sig = ("chimera", int(g.rows), int(g.cols), int(g.k),
+                     tuple(sorted(tuple(c) for c in (g.masked_cells or ()))),
+                     int(g.n_nodes), int(g.edges.shape[0]))
+        h = hashlib.sha1()
+        for f in dataclasses.fields(self.hw):
+            h.update(repr((f.name, getattr(self.hw, f.name))).encode())
+        hw_sig = h.hexdigest()[:16]
+        h = hashlib.sha1()
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.mismatch)[0]:
+            arr = jax.device_get(leaf)
+            h.update(jax.tree_util.keystr(path).encode())
+            h.update(str(arr.dtype).encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+        mm_sig = (type(self.mismatch).__name__, h.hexdigest()[:16])
+        mesh_sig = None
+        if self.mesh is not None:
+            mesh_sig = (tuple(self.mesh.axis_names),
+                        tuple(int(self.mesh.shape[a])
+                              for a in self.mesh.axis_names),
+                        tuple(int(d.id) for d in self.mesh.devices.flat))
+        part = self.partitioning()
+        part_sig = None if part is None else (part.rows_axes, part.chain_axes)
+        sync = self.sync_policy()
+        sync_sig = None if sync is None else (
+            sync.halo_every, sync.mode, sync.sweeps_per_launch)
+        sched_sig = None
+        if self.schedule is not None:
+            sched_sig = (type(self.schedule).__name__,
+                         tuple(sorted(dataclasses.asdict(
+                             self.schedule).items())))
+        return (graph_sig, hw_sig, mm_sig, self.noise,
+                resolve_backend(self), int(self.chains), float(self.beta),
+                float(self.w_scale), int(self.decimation),
+                bool(self.attach_sparse), resolve_interpret(self),
+                mesh_sig, part_sig, sync_sig, sched_sig,
+                None if self.faults is None else repr(self.faults))
+
     # -- validation ------------------------------------------------------
     def validate(self) -> "SamplerSpec":
         """Static sanity checks; raises ValueError naming the fix."""
@@ -594,6 +657,13 @@ def _auto_backend(spec: SamplerSpec) -> str:
     if in_kernel and dense_vmem_feasible(spec.graph.n_nodes):
         return "fused"
     return "ref"
+
+
+def spec_fingerprint(spec: SamplerSpec) -> str:
+    """Compact hex digest of `SamplerSpec.fingerprint()` — the string form
+    used as the serving layer's LRU key and in health/metrics output."""
+    import hashlib
+    return hashlib.sha1(repr(spec.fingerprint()).encode()).hexdigest()[:16]
 
 
 def resolve_interpret(spec: SamplerSpec) -> bool:

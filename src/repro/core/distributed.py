@@ -252,6 +252,31 @@ def halo_bytes_per_sweep(plan: RowPartition, chains: int,
         * plan.n_boundary * chains * 4
 
 
+def surviving_mesh(mesh: Mesh, dead_ids) -> Mesh | None:
+    """Re-plan a 1-D row mesh onto the devices that outlived a shard loss.
+
+    The serving degradation ladder (`repro.serve.degrade`) calls this when
+    heartbeats or the fault harness declare devices dead: survivors keep
+    the original axis name, so every `Partition(rows=axis)` in cached
+    specs stays valid and `plan_row_partition` simply re-cuts the row
+    bands over the smaller device count.  Returns ``None`` when fewer
+    than two devices survive — the caller then drops ``mesh=`` entirely
+    and falls back to the bit-exact single-device path rather than paying
+    halo-exchange overhead on a one-device "mesh".
+    """
+    dead = {int(d) for d in dead_ids}
+    survivors = [d for d in np.asarray(mesh.devices).reshape(-1)
+                 if int(d.id) not in dead]
+    if not survivors:
+        raise RuntimeError(
+            f"no devices survive: mesh {tuple(int(d.id) for d in np.asarray(mesh.devices).reshape(-1))} "
+            f"all marked dead ({sorted(dead)})")
+    if len(survivors) < 2:
+        return None
+    axis = mesh.axis_names[0]
+    return Mesh(np.asarray(survivors), (axis,))
+
+
 # ---------------------------------------------------------------------------
 # The sharded engine (compiled into api.Session closures)
 # ---------------------------------------------------------------------------

@@ -1,4 +1,12 @@
-"""Serving driver: batched prefill + decode with a continuous-batching loop.
+"""LANGUAGE-MODEL inference demo: batched prefill + decode for
+decoder-only transformer archs with a continuous-batching loop.
+
+This is NOT the p-bit sampling service.  The production serving layer
+for the probabilistic chip — multi-tenant admission control, the
+shape-bucketed compile cache, shard-loss degradation, fault-schedule
+testing — lives in `repro.serve` and runs as ``python -m repro.serve``
+(docs/serving.md).  This module stays as the LM-workload demo that
+exercises the transformer stack.
 
 CPU-sized example:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
@@ -21,7 +29,12 @@ from repro.models.model import build_model
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="Language-model inference demo (decoder-only archs, "
+                    "batched prefill + decode).  For the p-bit sampling "
+                    "service, use `python -m repro.serve` instead "
+                    "(docs/serving.md).")
     ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

@@ -10,8 +10,11 @@ Components
   `threshold`x the moving average.  At scale the action is "report the slow
   host to the scheduler and checkpoint"; here the action is a callback.
 * `retry_step` — retries a step function on transient failure with
-  exponential backoff (the XLA analogue of NCCL timeout-and-retry), and
-  falls back to `on_permanent` (normally: restore from checkpoint).
+  capped, decorrelated-jitter backoff (the XLA analogue of NCCL
+  timeout-and-retry), and falls back to `on_permanent` (normally:
+  restore from checkpoint).  Jitter matters under multi-tenancy: many
+  tenants retrying one flapped link with the same deterministic schedule
+  re-herd at exactly the same instants.
 * `ElasticState` — maps a checkpoint (mesh-agnostic, see checkpoint/) onto
   a *new* mesh after a node-count change; batch is re-split by the data
   pipeline's stateless (seed, step) addressing, so rescaling loses nothing.
@@ -22,6 +25,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import random as _random
 import time
 from pathlib import Path
 from typing import Any, Callable, Optional
@@ -66,17 +71,40 @@ class TransientError(RuntimeError):
 
 
 def retry_step(fn: Callable[[], Any], *, max_retries: int = 3,
-               backoff_s: float = 0.1,
+               backoff_s: float = 0.1, max_backoff_s: float = 30.0,
+               jitter: str = "decorrelated",
+               rng: Optional[_random.Random] = None,
                on_permanent: Optional[Callable[[BaseException], Any]] = None,
                sleep=time.sleep) -> Any:
+    """Run ``fn``, retrying `TransientError` with capped, jittered backoff.
+
+    ``jitter="decorrelated"`` (the default) draws each delay uniformly
+    from [backoff_s, 3 * previous_delay], capped at ``max_backoff_s`` —
+    concurrent tenants retrying the same flapped link spread out instead
+    of herding in lockstep at backoff_s * 2**attempt.  ``jitter="none"``
+    keeps the deterministic exponential schedule (still capped).  ``rng``
+    is an injectable `random.Random` for reproducible tests; delays never
+    influence results, only pacing.
+    """
+    if jitter not in ("decorrelated", "none"):
+        raise ValueError(
+            f"jitter must be 'decorrelated' or 'none', got {jitter!r}")
+    draw = (rng or _random).uniform
     last: Optional[BaseException] = None
+    prev = backoff_s
     for attempt in range(max_retries + 1):
         try:
             return fn()
         except TransientError as e:  # pragma: no branch
             last = e
             if attempt < max_retries:
-                sleep(backoff_s * (2 ** attempt))
+                if jitter == "none":
+                    delay = min(backoff_s * (2 ** attempt), max_backoff_s)
+                else:
+                    delay = min(max_backoff_s,
+                                draw(backoff_s, max(3.0 * prev, backoff_s)))
+                    prev = delay
+                sleep(delay)
     if on_permanent is not None:
         return on_permanent(last)
     raise last
@@ -88,7 +116,12 @@ class Heartbeat:
         self.path.parent.mkdir(parents=True, exist_ok=True)
 
     def beat(self, step: int) -> None:
-        self.path.write_text(json.dumps({"step": step, "t": time.time()}))
+        # tmp + rename: a reader (or a crash) must never observe a
+        # partially-written heartbeat — the liveness file is the one
+        # thing that must stay parseable while its writer is dying
+        tmp = self.path.with_name(self.path.name + ".tmp")
+        tmp.write_text(json.dumps({"step": step, "t": time.time()}))
+        os.replace(tmp, self.path)
 
     @staticmethod
     def dead_hosts(directory: str | Path, timeout_s: float,
@@ -97,9 +130,17 @@ class Heartbeat:
             now = time.time()
         dead = []
         for p in sorted(Path(directory).glob("host_*.alive")):
-            t = json.loads(p.read_text())["t"]
+            host = int(p.stem.split("_")[1])
+            try:
+                t = float(json.loads(p.read_text())["t"])
+            except (ValueError, KeyError, TypeError, OSError):
+                # an unparsable heartbeat (torn write from a host dying
+                # mid-beat, truncated file) is evidence of death, not an
+                # excuse to crash the launcher's health sweep
+                dead.append(host)
+                continue
             if now - t > timeout_s:
-                dead.append(int(p.stem.split("_")[1]))
+                dead.append(host)
         return dead
 
 

@@ -1,0 +1,43 @@
+"""`repro.serve` — the resilient multi-tenant p-bit sampling service.
+
+This package is the *p-bit chip* serving layer (docs/serving.md):
+admission control + deadlines, chains-axis request batching, a
+shape-bucketed LRU compile cache over `api.SamplerSpec.fingerprint()`,
+heartbeat-driven shard-loss degradation, and a deterministic
+fault-schedule harness.  ``python -m repro.serve`` runs the demo loop.
+
+Not to be confused with `repro.launch.serve`, the decoder-only *language
+model* inference demo that predates this subsystem.
+"""
+from repro.serve.cache import (
+    DEFAULT_BUCKETS,
+    Embedding,
+    SessionCache,
+    bucket_shape,
+    embed_graph,
+    embed_program,
+    make_bucket_graph,
+    program_digest,
+)
+from repro.serve.degrade import ShardHealthMonitor, ShardLostError
+from repro.serve.faultplan import FaultEvent, FaultInjector, FaultPlan
+from repro.serve.service import (
+    AdmissionError,
+    CircuitBreaker,
+    CircuitOpenError,
+    RequestResult,
+    SampleRequest,
+    SamplerService,
+    ServiceError,
+    Ticket,
+)
+
+__all__ = [
+    "DEFAULT_BUCKETS", "Embedding", "SessionCache", "bucket_shape",
+    "embed_graph", "embed_program", "make_bucket_graph", "program_digest",
+    "ShardHealthMonitor", "ShardLostError",
+    "FaultEvent", "FaultInjector", "FaultPlan",
+    "AdmissionError", "CircuitBreaker", "CircuitOpenError",
+    "RequestResult", "SampleRequest", "SamplerService", "ServiceError",
+    "Ticket",
+]

@@ -81,9 +81,9 @@ def test_retry_step_backoff_and_permanent():
             raise TransientError("link flap")
         return "ok"
 
-    assert retry_step(flaky, max_retries=3, backoff_s=0.1,
+    assert retry_step(flaky, max_retries=3, backoff_s=0.1, jitter="none",
                       sleep=sleeps.append) == "ok"
-    assert sleeps == [0.1, 0.2]          # exponential backoff
+    assert sleeps == [0.1, 0.2]          # deterministic exponential mode
 
     def always():
         raise TransientError("dead")
@@ -94,6 +94,80 @@ def test_retry_step_backoff_and_permanent():
     with pytest.raises(TransientError):
         retry_step(always, max_retries=1, backoff_s=0.0,
                    sleep=lambda s: None)
+
+
+def test_retry_step_backoff_is_capped():
+    """The old schedule was backoff_s * 2**attempt, uncapped — attempt 20
+    would sleep for a day.  Both modes must respect max_backoff_s."""
+    sleeps = []
+
+    def always():
+        raise TransientError("dead")
+
+    with pytest.raises(TransientError):
+        retry_step(always, max_retries=8, backoff_s=1.0, max_backoff_s=3.0,
+                   jitter="none", sleep=sleeps.append)
+    assert sleeps == [1.0, 2.0, 3.0, 3.0, 3.0, 3.0, 3.0, 3.0]
+
+    sleeps = []
+    with pytest.raises(TransientError):
+        retry_step(always, max_retries=20, backoff_s=0.5, max_backoff_s=2.0,
+                   rng=__import__("random").Random(7), sleep=sleeps.append)
+    assert all(s <= 2.0 for s in sleeps)
+
+
+def test_retry_step_decorrelated_jitter():
+    """Decorrelated jitter: each delay is uniform on [base, 3*previous],
+    seeded via the injectable rng — two tenants with different rngs must
+    NOT sleep in lockstep (the herding bug this replaces)."""
+    import random as _r
+
+    def always():
+        raise TransientError("dead")
+
+    def delays(seed):
+        out = []
+        with pytest.raises(TransientError):
+            retry_step(always, max_retries=5, backoff_s=0.1,
+                       max_backoff_s=10.0, rng=_r.Random(seed),
+                       sleep=out.append)
+        return out
+
+    a, b = delays(1), delays(2)
+    assert len(a) == len(b) == 5
+    assert a != b                         # decorrelated across tenants
+    prev_a = 0.1
+    for d in a:
+        assert 0.1 <= d <= min(10.0, 3.0 * max(prev_a, 0.1) + 1e-12)
+        prev_a = d
+    # same rng seed -> same schedule: reproducible in tests
+    assert delays(3) == delays(3)
+    with pytest.raises(ValueError, match="jitter"):
+        retry_step(always, max_retries=1, jitter="bogus",
+                   sleep=lambda s: None)
+
+
+def test_heartbeat_atomic_beat_and_unparsable_is_dead(tmp_path):
+    """`beat` must go through tmp+rename (no *.alive.tmp leftovers counted,
+    final file parseable), and a torn/corrupt heartbeat counts as DEAD
+    instead of crashing the launcher's sweep."""
+    hb = Heartbeat(tmp_path, host_id=0)
+    hb.beat(step=7)
+    payload = json.loads(hb.path.read_text())
+    assert payload["step"] == 7
+    assert Heartbeat.dead_hosts(
+        tmp_path, timeout_s=60.0, now=payload["t"]) == []
+    # a second beat replaces, never appends/tears
+    hb.beat(step=8)
+    assert json.loads(hb.path.read_text())["step"] == 8
+    assert not list(Path(tmp_path).glob("*.tmp"))
+    # host 1 died mid-write: truncated JSON
+    (tmp_path / "host_1.alive").write_text('{"step": 3, "t": 1')
+    # host 2 wrote garbage keys
+    (tmp_path / "host_2.alive").write_text('{"nope": true}')
+    dead = Heartbeat.dead_hosts(tmp_path, timeout_s=60.0,
+                                now=payload["t"])
+    assert dead == [1, 2]
 
 
 def test_straggler_watchdog_flags_slow_step():
