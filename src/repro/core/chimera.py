@@ -81,6 +81,25 @@ class ChimeraGraph:
         e = self.edges
         return bool(np.all(self.color[e[:, 0]] != self.color[e[:, 1]]))
 
+    def coord_lut(self) -> np.ndarray:
+        """Coordinate -> compacted-node-id lookup table.
+
+        ``lut[r, c, side, k]`` is the compacted node id at that Chimera
+        coordinate, or -1 where the cell is masked.  This is the inverse
+        of the (node_r, node_c, node_side, node_k) arrays and the basis
+        of every coordinate-addressed embedding (the serving layer's
+        shape buckets, the PSL chain embedder).
+        """
+        lut = -np.ones((self.rows, self.cols, 2, self.k), np.int64)
+        lut[self.node_r, self.node_c, self.node_side,
+            self.node_k] = np.arange(self.n_nodes)
+        return lut
+
+    def edge_index(self) -> dict[tuple[int, int], int]:
+        """Map (i, j) with i < j -> row index into ``edges``."""
+        return {(int(i), int(j)): e
+                for e, (i, j) in enumerate(np.asarray(self.edges))}
+
     # -- fixed-degree sparse layout -------------------------------------
     def neighbor_table(self) -> tuple[np.ndarray, np.ndarray]:
         """Fixed-degree neighbor table (ELL layout) of the coupler set.

@@ -100,6 +100,48 @@ def full_adder_task(graph: ChimeraGraph,
         "full_adder", vis, _dist_from_rows(5, full_adder_rows()))
 
 
+def full_adder_inference(graph: ChimeraGraph | None = None, *,
+                         key=None, chains: int = 64,
+                         **compile_kw) -> dict:
+    """Full-adder truth-table inference through the PSL compiler.
+
+    This is the *fixed* inference path for the chip's Fig-8b demo: the
+    exact gate Hamiltonian (psl/gates.py) chain-embedded onto ``graph``
+    (default: the smallest Chimera that fits, 2x2), inputs clamped per
+    row, outputs read by clause-filtered chain-majority vote
+    (psl/readout.py).  The learned-machine route (`full_adder_task` +
+    CD + raw clamped sampling, examples/full_adder.py) recovers only
+    ~3/8 rows; this one recovers 8/8 — the before/after is asserted in
+    tests/test_system.py.
+
+    Returns ``{"rows_correct", "rows", "broken_chain_fraction"}`` where
+    ``rows`` maps (a, b, cin) -> (s, cout, ok).
+    """
+    import jax
+
+    from repro import psl
+
+    if graph is None:
+        from repro.core.chimera import make_chimera
+        graph = make_chimera(2, 2)
+    key = jax.random.PRNGKey(0) if key is None else key
+    cc = psl.compile_circuit(psl.full_adder_circuit(), graph,
+                             chains=chains, **compile_kw)
+    rows: dict[tuple[int, int, int], tuple[int, int, bool]] = {}
+    correct, broken = 0, []
+    for a, b, cin, s, cout in (
+            tuple((v + 1) // 2 for v in row) for row in full_adder_rows()):
+        key, sub = jax.random.split(key)
+        r = cc.run_forward(sub, {"a": a, "b": b, "cin": cin})
+        got_s, got_c = r.infer("s"), r.infer("cout")
+        ok = (got_s == s and got_c == cout)
+        correct += ok
+        broken.append(r.broken_chain_fraction)
+        rows[(a, b, cin)] = (got_s, got_c, ok)
+    return {"rows_correct": correct, "rows": rows,
+            "broken_chain_fraction": float(np.mean(broken))}
+
+
 def xor_gate_task(graph: ChimeraGraph, cell: tuple[int, int] = (0, 0)
                   ) -> BoltzmannTask:
     """XOR needs hidden units (not linearly separable) — a good stress test."""

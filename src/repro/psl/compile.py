@@ -1,0 +1,203 @@
+"""Compile PSL circuits into Session-ready `api.SamplerSpec`s.
+
+`compile_circuit(circuit, graph)` is the top of the stack: synthesize
+the logical Hamiltonian (psl/circuit.py), minor-embed it (psl/embed.py),
+and wrap the result in a frozen `CompiledCircuit` holding the
+`api.SamplerSpec` plus everything needed to program, clamp, and decode.
+`PCircuit.to_spec(graph)` is sugar for ``compile_circuit(...).spec``.
+
+Execution goes through an *unmodified* `api.Session`:
+
+* programming — `Session.program_edges(emb.J_codes, emb.h_codes)`:
+  the embedder's code arrays already align with ``graph.edges``;
+* forward mode — clamp the input ports' chains (`run_forward`), anneal,
+  majority-decode the outputs;
+* inverse mode — clamp the output ports' chains (`run_inverse`) and
+  read the *input* distributions: the Hamiltonian has no direction, so
+  a multiplier becomes a factorizer by swapping which ports are pinned.
+
+Defaults are chosen for exactness-of-representation first: an ideal
+`HardwareConfig` (the compiled Hamiltonian *is* the logical one up to
+the integer code scale), a zero-sigma `SparseMismatch` (O(D·N), so
+specs default to the sparse backends that scale), ``w_scale = 1 /
+code_unit`` so one logical-J unit is exactly 1.0 in neuron-input units
+(betas therefore mean the same thing for every circuit regardless of
+quantization), and a geometric anneal that ends cold enough to freeze
+the ground state.  Every default can be overridden per call — mismatch
+and hardware models pass straight through to the spec, so a compiled
+circuit can also be run on a *non-ideal* virtual chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.chimera import ChimeraGraph
+from repro.core.hardware import (
+    HardwareConfig,
+    Mismatch,
+    SparseMismatch,
+    sample_mismatch,
+    sample_mismatch_sparse,
+)
+from repro.psl.circuit import LogicalIsing, PCircuit
+from repro.psl.embed import ChainEmbedding, embed_circuit
+from repro.psl.readout import Readout, clamp_arrays, decode_result
+
+DEFAULT_SWEEPS = 300
+DEFAULT_CHAINS = 64
+DEFAULT_BETA_START = 0.1
+DEFAULT_BETA_END = 2.5
+
+
+def _default_mismatch(graph: ChimeraGraph, hw: HardwareConfig,
+                      dense: bool, key):
+    """Zero-key mismatch draw (deterministic); ideal hw ⇒ all-zero
+    sigmas, so the draw is exactly the textbook chip."""
+    import jax
+
+    key = jax.random.PRNGKey(0) if key is None else key
+    if dense:
+        return sample_mismatch(key, graph.n_nodes, hw)
+    nbr_idx, _ = graph.neighbor_table()
+    return sample_mismatch_sparse(key, graph.n_nodes, nbr_idx.shape[0], hw)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledCircuit:
+    """A PSL circuit compiled onto one graph: spec + embedding + decode.
+
+    Frozen value object; the lazily-built `api.Session` and programmed
+    chip are cached out-of-band (they are jax state, not part of the
+    circuit's identity).
+    """
+
+    name: str
+    logical: LogicalIsing
+    embedding: ChainEmbedding
+    spec: Any  # api.SamplerSpec
+
+    def __post_init__(self):
+        object.__setattr__(self, "_cache", {})
+
+    # -- execution helpers ----------------------------------------------
+    def session(self):
+        """The compiled `api.Session` (built once, cached)."""
+        if "session" not in self._cache:
+            from repro import api
+            self._cache["session"] = api.Session(self.spec)
+        return self._cache["session"]
+
+    def chip(self):
+        """The programmed `EffectiveChip` (built once, cached)."""
+        if "chip" not in self._cache:
+            self._cache["chip"] = self.session().program_edges(
+                self.embedding.J_codes, self.embedding.h_codes)
+        return self._cache["chip"]
+
+    def clamp(self, assignments: Mapping[str, int]
+              ) -> tuple[np.ndarray, np.ndarray]:
+        """Port assignments -> Session clamp arrays (whole chains)."""
+        return clamp_arrays(self.embedding, self.logical, assignments,
+                            self.spec.chains)
+
+    def run(self, key, assignments: Mapping[str, int] | None = None,
+            betas=None) -> Readout:
+        """Anneal once and decode the final states of every Gibbs chain.
+
+        ``assignments`` maps port names to integer values; named ports'
+        chains are clamped, everything else free-runs.  Forward logic
+        clamps inputs, inverse logic clamps outputs — the sampler does
+        not know the difference.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        session = self.session()
+        chip = self.chip()
+        k1, k2 = jax.random.split(key)
+        m0 = session.random_spins(k1)
+        ns = session.noise_state(k2)
+        if assignments:
+            cm, cv = self.clamp(assignments)
+            m, _, _ = session.sample(chip, m0, ns, betas,
+                                     clamp_mask=jnp.asarray(cm),
+                                     clamp_values=jnp.asarray(cv))
+        else:
+            m, _, _ = session.sample(chip, m0, ns, betas)
+        return decode_result(self.logical, self.embedding, np.asarray(m))
+
+    def run_forward(self, key, inputs: Mapping[str, int] | None = None,
+                    betas=None) -> Readout:
+        """Clamp every declared input port (values required for all)."""
+        inputs = dict(inputs or {})
+        missing = [p for p in self.logical.inputs if p not in inputs]
+        if missing:
+            raise ValueError(
+                f"forward run needs every input port; missing {missing}")
+        return self.run(key, inputs, betas)
+
+    def run_inverse(self, key, outputs: Mapping[str, int] | None = None,
+                    betas=None) -> Readout:
+        """Clamp every declared output port — invertible-logic mode."""
+        outputs = dict(outputs or {})
+        missing = [p for p in self.logical.outputs if p not in outputs]
+        if missing:
+            raise ValueError(
+                f"inverse run needs every output port; missing {missing}")
+        return self.run(key, outputs, betas)
+
+
+def compile_circuit(
+    circuit: PCircuit | LogicalIsing,
+    graph: ChimeraGraph,
+    *,
+    chain_scale: float = 2.0,
+    origin: tuple[int, int] | None = None,
+    backend: str = "auto",
+    noise: str = "counter",
+    chains: int = DEFAULT_CHAINS,
+    n_sweeps: int = DEFAULT_SWEEPS,
+    beta_start: float = DEFAULT_BETA_START,
+    beta_end: float = DEFAULT_BETA_END,
+    schedule=None,
+    hw: HardwareConfig | None = None,
+    mismatch: Mismatch | SparseMismatch | None = None,
+    mismatch_key=None,
+    interpret: bool | None = None,
+    w_scale: float | None = None,
+) -> CompiledCircuit:
+    """Netlist -> Chimera-embedded `CompiledCircuit` (see module doc).
+
+    ``backend="ref"`` (or any dense backend) switches the default
+    mismatch to the dense model, since a sparse-native spec rejects
+    dense backends by construction.  ``schedule`` overrides the default
+    geometric `api.Anneal`; ``w_scale`` overrides the exact
+    1/code_unit logical-unit scale.
+    """
+    from repro import api
+
+    name = getattr(circuit, "name", "pcircuit")
+    logical = circuit.synthesize() if isinstance(circuit, PCircuit) \
+        else circuit
+    emb = embed_circuit(logical, graph, chain_scale=chain_scale,
+                        origin=origin)
+
+    hw = HardwareConfig.ideal() if hw is None else hw
+    if mismatch is None:
+        dense = backend in ("ref", "pallas", "fused")
+        mismatch = _default_mismatch(graph, hw, dense, mismatch_key)
+    if schedule is None:
+        schedule = api.Anneal(beta_start, beta_end, n_sweeps=n_sweeps)
+    if w_scale is None:
+        # one logical-J unit == 1.0 neuron-input unit, exactly: betas
+        # are in logical-energy units for every circuit
+        w_scale = 1.0 / emb.code_unit
+    spec = api.SamplerSpec(
+        graph=graph, hw=hw, mismatch=mismatch, noise=noise,
+        backend=backend, schedule=schedule, chains=chains,
+        beta=beta_end, w_scale=w_scale, interpret=interpret)
+    return CompiledCircuit(name=name, logical=logical, embedding=emb,
+                           spec=spec)

@@ -74,9 +74,7 @@ def embed_graph(graph: ChimeraGraph, bucket: ChimeraGraph) -> Embedding:
         raise ValueError(
             f"graph {graph.rows}x{graph.cols} does not fit bucket "
             f"{bucket.rows}x{bucket.cols}")
-    lut = -np.ones((bucket.rows, bucket.cols, 2, bucket.k), np.int64)
-    lut[bucket.node_r, bucket.node_c, bucket.node_side,
-        bucket.node_k] = np.arange(bucket.n_nodes)
+    lut = bucket.coord_lut()
     node_map = lut[graph.node_r, graph.node_c, graph.node_side, graph.node_k]
     if (node_map < 0).any():
         bad = np.unique(graph.node_r[node_map < 0] * 1000
@@ -84,8 +82,7 @@ def embed_graph(graph: ChimeraGraph, bucket: ChimeraGraph) -> Embedding:
         raise ValueError(
             f"graph uses cells masked out of the bucket: "
             f"{[(int(b) // 1000, int(b) % 1000) for b in bad]}")
-    edge_lut = {(int(i), int(j)): e
-                for e, (i, j) in enumerate(np.asarray(bucket.edges))}
+    edge_lut = bucket.edge_index()
     be = node_map[np.asarray(graph.edges)]  # (E_small, 2) bucket node ids
     edge_map = np.empty(be.shape[0], np.int64)
     for e, (a, b) in enumerate(be):

@@ -1,0 +1,360 @@
+"""PSL compiler tests: gate Hamiltonians, embedding, decode, end-to-end.
+
+Three layers, tested in order of cost:
+
+* exact layer (no sampling): every gate Hamiltonian's *degenerate
+  ground set* equals its truth table, enumerated exhaustively via the
+  `LogicalIsing.dense()` oracle; composed adders/multipliers inherit
+  the property through superposition.
+* embedding layer (no sampling): clique-ladder placement on masked
+  non-square graphs, chain-strength/code scaling, bit-exact
+  determinism, the `validate_embedding` invariants, and the
+  chain-majority decoder on hand-built physical states.
+* sampling layer: gate truth tables forward AND inverse through an
+  unmodified `api.Session` across the ref / sparse / fused_sparse
+  backends, plus the acceptance run — a composed 2-bit ripple adder on
+  a masked Chimera recovering all 16 forward rows and the addend
+  preimage of a clamped sum.
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api, psl
+from repro.core.chimera import make_chimera
+
+
+# ---------------------------------------------------------------------------
+# exact-enumeration helpers (small N only)
+# ---------------------------------------------------------------------------
+def _all_states(n):
+    return np.asarray(list(itertools.product((-1, 1), repeat=n)), np.int8)
+
+
+def _energies(logical, states):
+    Jd, h = logical.dense()
+    s = states.astype(np.float64)
+    return -0.5 * np.einsum("si,ij,sj->s", s, Jd, s) - s @ h
+
+
+def _ground_set(logical):
+    """(rows, gap): min-energy states and the gap to the first excited."""
+    states = _all_states(logical.n_spins)
+    e = _energies(logical, states)
+    e0 = e.min()
+    ground = states[np.isclose(e, e0)]
+    excited = e[~np.isclose(e, e0)]
+    gap = float(excited.min() - e0) if excited.size else np.inf
+    return {tuple(r) for r in ground}, gap
+
+
+GATE_CIRCUITS = [
+    psl.copy_circuit, psl.not_circuit, psl.and_circuit, psl.or_circuit,
+    psl.xor_circuit, psl.full_adder_circuit,
+]
+
+
+@pytest.mark.parametrize("builder", GATE_CIRCUITS,
+                         ids=lambda b: b.__name__)
+def test_gate_ground_states_equal_truth_tables(builder):
+    """The synthesized Hamiltonian's degenerate ground set is *exactly*
+    the clause-valid set, with a positive gap — the property that makes
+    annealed inference correct at all."""
+    logical = builder().synthesize()
+    ground, gap = _ground_set(logical)
+    valid = {tuple(r) for r in logical.valid_assignments()}
+    assert ground == valid
+    assert gap > 0
+
+
+@pytest.mark.parametrize("n_bits,with_cin", [(1, False), (2, False),
+                                             (2, True)])
+def test_ripple_adder_ground_states_are_sums(n_bits, with_cin):
+    logical = psl.ripple_adder_circuit(n_bits, with_cin=with_cin
+                                       ).synthesize()
+    ground, gap = _ground_set(logical)
+    assert gap > 0
+    a_ids, b_ids = logical.port("a"), logical.port("b")
+    s_ids, c_ids = logical.port("sum"), logical.port("cout")
+    seen = set()
+    for row in ground:
+        row = np.asarray(row)
+        a = int(psl.bits_to_int(row[list(a_ids)]))
+        b = int(psl.bits_to_int(row[list(b_ids)]))
+        cin = int(psl.bits_to_int(row[list(logical.port("cin"))])) \
+            if with_cin else 0
+        total = int(psl.bits_to_int(row[list(s_ids)])) \
+            + (int(psl.bits_to_int(row[list(c_ids)])) << n_bits)
+        assert a + b + cin == total
+        seen.add((a, b, cin))
+    # every input combination appears exactly once in the ground set
+    n_in = 2 * n_bits + (1 if with_cin else 0)
+    assert len(seen) == 2 ** n_in
+    assert len(ground) == 2 ** n_in
+
+
+def test_multiplier_ground_states_are_products():
+    logical = psl.multiplier_circuit(2).synthesize()
+    ground, gap = _ground_set(logical)
+    assert gap > 0
+    a_ids, b_ids = logical.port("a"), logical.port("b")
+    p_ids = logical.port("prod")
+    seen = set()
+    for row in ground:
+        row = np.asarray(row)
+        a = int(psl.bits_to_int(row[list(a_ids)]))
+        b = int(psl.bits_to_int(row[list(b_ids)]))
+        prod = int(psl.bits_to_int(row[list(p_ids)]))
+        assert a * b == prod
+        seen.add((a, b))
+    assert len(seen) == 16 and len(ground) == 16
+
+
+def test_synthesize_sparse_canonical_form():
+    logical = psl.ripple_adder_circuit(2).synthesize()
+    e = np.asarray(logical.edges)
+    assert np.all(e[:, 0] < e[:, 1])
+    assert np.array_equal(e, e[np.lexsort((e[:, 1], e[:, 0]))])
+    assert not np.any(logical.J == 0.0)          # cancelled terms dropped
+    Jd, _ = logical.dense()
+    assert np.array_equal(Jd, Jd.T)
+    assert logical.degrees().sum() == 2 * logical.n_edges
+
+
+def test_builder_rejects_bad_input():
+    c = psl.PCircuit()
+    i = c.spin("x")
+    with pytest.raises(ValueError):
+        c.add_coupling(i, i, 1.0)                # self-coupling
+    with pytest.raises(ValueError):
+        c.add_coupling(i, i + 1, 1.0)            # unallocated spin
+    c.mark_input("p", i)
+    with pytest.raises(ValueError):
+        c.mark_output("p", i)                    # duplicate port name
+    with pytest.raises(KeyError):
+        c.synthesize().port("q")
+
+
+def test_bits_int_roundtrip():
+    for n in (1, 3, 5):
+        for v in range(1 << n):
+            assert int(psl.bits_to_int(psl.int_to_spins(v, n))) == v
+    with pytest.raises(ValueError):
+        psl.int_to_spins(8, 3)
+    with pytest.raises(ValueError):
+        psl.int_to_spins(-1, 3)
+
+
+# ---------------------------------------------------------------------------
+# embedding layer
+# ---------------------------------------------------------------------------
+def test_embed_on_masked_nonsquare_grid():
+    """Placement scan must dodge the masked cell: the first 2x2 window
+    on a 3x4 grid with (0,0) masked starts at column 1."""
+    logical = psl.ripple_adder_circuit(2).synthesize()
+    g = make_chimera(3, 4, masked_cells=[(0, 0)])
+    emb = psl.embed_circuit(logical, g)           # runs validate_embedding
+    r0, c0, m = emb.window
+    assert (r0, c0) == (0, 1) and m == 2
+    assert emb.chain_length == 2 * m
+    assert emb.n_physical == logical.n_spins * 2 * m
+    flat = [x for ch in emb.chain_nodes for x in ch]
+    assert len(set(flat)) == len(flat)
+    assert 0 <= min(flat) and max(flat) < g.n_nodes
+    st = emb.stats()
+    assert st["overhead_spins"] == emb.n_physical - logical.n_spins
+    assert 0 < st["utilization"] <= 1
+
+
+def test_embed_window_origin_and_errors():
+    logical = psl.and_circuit().synthesize()      # 3 spins -> 1x1 window
+    g = make_chimera(2, 2, masked_cells=[(0, 0)])
+    emb = psl.embed_circuit(logical, g, origin=(1, 1))
+    assert emb.window == (1, 1, 1)
+    with pytest.raises(ValueError):               # pinned onto masked cell
+        psl.embed_circuit(logical, g, origin=(0, 0))
+    with pytest.raises(ValueError):               # off the grid
+        psl.embed_circuit(logical, g, origin=(2, 0))
+    big = psl.multiplier_circuit(2).synthesize()  # 12 spins -> 3x3 cells
+    with pytest.raises(ValueError):               # graph too small
+        psl.embed_circuit(big, make_chimera(2, 2))
+
+
+def test_chain_strength_and_code_scaling():
+    g = make_chimera(2, 2)
+    # full adder: max|J| = 4 -> chain 8, code_unit = floor(127/8) = 15
+    fa = psl.full_adder_circuit().synthesize()
+    emb = psl.embed_circuit(fa, g)
+    assert emb.chain_strength == pytest.approx(2.0 * 4.0)
+    assert emb.code_unit == 15
+    assert np.all(emb.J_codes[emb.chain_edge_idx] == 120)
+    assert np.array_equal(np.asarray(emb.J_codes)[emb.coupler_edge_idx],
+                          np.round(fa.J * 15).astype(np.int32))
+    assert np.all(emb.h_codes == 0)               # FA has h = 0
+    # AND: max|J| = 2 -> chain 4, code_unit = 31; biases land on junctions
+    an = psl.and_circuit().synthesize()
+    emb2 = psl.embed_circuit(an, g)
+    assert emb2.chain_strength == pytest.approx(4.0)
+    assert emb2.code_unit == 31
+    roots = [ch[0] for ch in emb2.chain_nodes]
+    assert np.array_equal(np.asarray(emb2.h_codes)[roots],
+                          np.round(an.h * 31).astype(np.int32))
+    assert np.count_nonzero(emb2.h_codes) == np.count_nonzero(an.h)
+    # chain_scale knob propagates into both strength and codes
+    emb3 = psl.embed_circuit(an, g, chain_scale=3.0)
+    assert emb3.chain_strength == pytest.approx(6.0)
+    assert emb3.code_unit == 21
+    assert np.all(emb3.J_codes[emb3.chain_edge_idx] == 126)
+
+
+def test_embedding_bit_exact_determinism():
+    """Same (circuit, graph, options) -> byte-identical embedding and
+    spec scale; the compiler has no hidden randomness."""
+    g = make_chimera(3, 4, masked_cells=[(1, 2)])
+    c = psl.ripple_adder_circuit(2)
+    cc1 = psl.compile_circuit(c, g)
+    cc2 = psl.compile_circuit(c, g)
+    assert cc1.embedding.window == cc2.embedding.window
+    assert cc1.embedding.chain_nodes == cc2.embedding.chain_nodes
+    assert np.array_equal(cc1.embedding.J_codes, cc2.embedding.J_codes)
+    assert np.array_equal(cc1.embedding.h_codes, cc2.embedding.h_codes)
+    assert cc1.spec.w_scale == cc2.spec.w_scale
+    spec = c.to_spec(g)
+    assert spec.w_scale == pytest.approx(1.0 / cc1.embedding.code_unit)
+
+
+def test_decode_majority_and_broken_chains():
+    """Hand-built physical states: unanimous chains decode cleanly, a
+    flipped member marks the chain broken, and even-length ties resolve
+    to the junction (bias-site) node."""
+    logical = psl.full_adder_circuit().synthesize()
+    g = make_chimera(2, 2)                        # 5 chains of length 4
+    emb = psl.embed_circuit(logical, g)
+    assert emb.chain_length == 4
+    state = -np.ones(g.n_nodes, np.int8)
+    for ch in emb.chain_nodes:
+        for node in ch:
+            state[node] = 1
+    logical_spins, broken = psl.decode_states(emb, state)
+    assert np.array_equal(logical_spins, [1] * 5)
+    assert not broken.any()
+    # one flipped non-junction member: majority survives, chain flagged
+    s2 = state.copy()
+    s2[emb.chain_nodes[0][1]] = -1
+    l2, b2 = psl.decode_states(emb, s2)
+    assert np.array_equal(l2, [1] * 5)
+    assert b2.tolist() == [True, False, False, False, False]
+    # 2-2 tie: the junction node (index 0, the bias site) casts the vote
+    s3 = state.copy()
+    s3[emb.chain_nodes[0][1]] = -1
+    s3[emb.chain_nodes[0][2]] = -1
+    l3, b3 = psl.decode_states(emb, s3)
+    assert l3[0] == 1 and b3[0]
+    s4 = s3.copy()
+    s4[emb.chain_nodes[0][0]] = -1                # flip the junction too
+    s4[emb.chain_nodes[0][3]] = 1
+    l4, _ = psl.decode_states(emb, s4)
+    assert l4[0] == -1
+    # batch decode keeps leading shape
+    batch = np.stack([state, s2])
+    lb, bb = psl.decode_states(emb, batch)
+    assert lb.shape == (2, 5) and bb.shape == (2, 5)
+
+
+def test_clamp_arrays_pin_whole_chains():
+    logical = psl.and_circuit().synthesize()
+    g = make_chimera(2, 2)
+    emb = psl.embed_circuit(logical, g)
+    mask, values = psl.clamp_arrays(emb, logical, {"a": 1, "b": 0}, 8)
+    assert values.shape == (8, g.n_nodes)
+    a_nodes = set(emb.chain_nodes[logical.port("a")[0]])
+    b_nodes = set(emb.chain_nodes[logical.port("b")[0]])
+    assert set(np.flatnonzero(mask)) == a_nodes | b_nodes
+    assert np.all(values[:, sorted(a_nodes)] == 1.0)
+    assert np.all(values[:, sorted(b_nodes)] == -1.0)
+    assert np.all(values[:, ~mask] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# sampling layer: gate truth tables through an unmodified api.Session
+# ---------------------------------------------------------------------------
+BACKENDS = [
+    ("ref", "philox", None),
+    ("sparse", "counter", None),
+    ("fused_sparse", "counter", True),
+]
+
+
+@pytest.mark.parametrize("backend,noise,interpret", BACKENDS,
+                         ids=[b for b, _, _ in BACKENDS])
+def test_and_gate_forward_and_inverse(backend, noise, interpret):
+    """AND on one Chimera cell: all 4 forward rows, then inverse mode —
+    clamp the output and check the sampled preimage — per backend."""
+    cc = psl.compile_circuit(
+        psl.and_circuit(), make_chimera(1, 1), backend=backend,
+        noise=noise, interpret=interpret, chains=32, n_sweeps=200)
+    key = jax.random.PRNGKey(0)
+    for a in (0, 1):
+        for b in (0, 1):
+            key, sub = jax.random.split(key)
+            r = cc.run_forward(sub, {"a": a, "b": b})
+            assert r.infer("y") == (a & b), (a, b, r.port_counts("y"))
+    # inverse y=1: the only valid preimage is (1, 1)
+    key, sub = jax.random.split(key)
+    r = cc.run_inverse(sub, {"y": 1})
+    assert r.infer("a") == 1 and r.infer("b") == 1
+    # inverse y=0: every clause-valid sample has a & b == 0
+    key, sub = jax.random.split(key)
+    r = cc.run_inverse(sub, {"y": 0})
+    valid = r.valid_mask()
+    assert valid.any()
+    a_v, b_v = r.port_values("a")[valid], r.port_values("b")[valid]
+    assert np.all((a_v & b_v) == 0)
+
+
+def test_xor_gate_forward_rows():
+    """XOR has a free ancilla spin (3-spin parity is not pairwise
+    realizable) — the decoder must still infer the right output."""
+    cc = psl.compile_circuit(psl.xor_circuit(), make_chimera(1, 1),
+                             chains=32, n_sweeps=200)
+    key = jax.random.PRNGKey(1)
+    for a in (0, 1):
+        for b in (0, 1):
+            key, sub = jax.random.split(key)
+            r = cc.run_forward(sub, {"a": a, "b": b})
+            assert r.infer("y") == (a ^ b), (a, b, r.port_counts("y"))
+
+
+def test_ripple_adder_end_to_end_on_masked_chimera():
+    """Acceptance: a composed 2-bit adder compiles via `to_spec` onto a
+    masked Chimera, samples through an unmodified `api.Session`, and
+    recovers every forward truth-table row AND the addend preimage of a
+    clamped sum (majority-vote readout)."""
+    g = make_chimera(3, 4, masked_cells=[(0, 0)])
+    circuit = psl.ripple_adder_circuit(2)
+    spec = circuit.to_spec(g)                     # the one-call path
+    session = api.Session(spec)                   # unmodified Session
+    cc = psl.compile_circuit(circuit, g)
+    chip = session.program_edges(cc.embedding.J_codes,
+                                 cc.embedding.h_codes)
+    assert chip is not None
+
+    key = jax.random.PRNGKey(2)
+    for a in range(4):
+        for b in range(4):
+            key, sub = jax.random.split(key)
+            r = cc.run_forward(sub, {"a": a, "b": b})
+            total = r.infer("sum") + (r.infer("cout") << 2)
+            assert total == a + b, (a, b, total, r.summary())
+
+    # inverse: clamp sum = 2 (cout = 0); preimage = {(0,2),(1,1),(2,0)}
+    key, sub = jax.random.split(key)
+    r = cc.run_inverse(sub, {"sum": 2, "cout": 0})
+    valid = r.valid_mask()
+    assert valid.any(), r.summary()
+    a_v = r.port_values("a")[valid]
+    b_v = r.port_values("b")[valid]
+    pairs = {(int(x), int(y)) for x, y in zip(a_v, b_v)}
+    assert pairs and pairs <= {(0, 2), (1, 1), (2, 0)}, pairs
