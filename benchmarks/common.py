@@ -16,10 +16,19 @@ def timer(fn, *args, warmup: int = 1, iters: int = 3):
         jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
+        ts.append(timed(fn, *args)[0])
     return sorted(ts)[len(ts) // 2]
+
+
+def timed(fn, *args):
+    """One-shot wall time of fn(*args): (seconds, result), result fully
+    materialized via block_until_ready — the only honest way to time a
+    dispatch under jax's async execution.  Use `timer` for steady-state
+    medians; use this for costs that exist exactly once (first-call
+    compile, a cache miss, a cold model load)."""
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0, out
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -16,6 +16,7 @@ table; `core.cd.PBitMachine.session(...)` builds specs/sessions from the
 familiar machine object.
 """
 from repro.api.faults import Faults, sample_faults
+from repro.api.program import Program, stack_programs
 from repro.api.spec import (
     BACKENDS,
     FUSED_BACKENDS,
@@ -38,6 +39,7 @@ from repro.api.session import (
     Session,
     SessionState,
     program,
+    program_chip,
     program_edges,
     program_master,
 )
@@ -47,8 +49,8 @@ __all__ = [
     "SPARSE_BACKENDS",
     "Schedule", "Constant", "Anneal", "Tempered",
     "Partition", "Sync", "SamplerSpec", "Session", "SessionState",
-    "Faults", "sample_faults",
-    "program", "program_edges", "program_master",
+    "Faults", "sample_faults", "Program", "stack_programs",
+    "program", "program_chip", "program_edges", "program_master",
     "dense_vmem_feasible", "resolve_backend", "resolve_interpret",
     "spec_fingerprint",
 ]

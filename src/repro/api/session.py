@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.program import Program
 from repro.api.spec import (
     SamplerSpec,
     resolve_backend,
@@ -44,6 +45,13 @@ from repro.core.hardware import (
     program_weights_sparse,
     quantize_codes,
 )
+from repro.kernels.ref import scatter_edge_slots
+
+# the fleet axis vmaps whole sampling closures; the launch-resident fused
+# engines demote to their bit-exact scan siblings under vmap (the Pallas
+# batching path is not part of the bit-exactness contract), so a K-fleet
+# result is bit-identical to K sequential single-program calls
+_FLEET_BACKEND = {"fused": "ref", "fused_sparse": "sparse", "pallas": "ref"}
 
 
 class SessionState(NamedTuple):
@@ -172,11 +180,8 @@ def program_edges(spec: SamplerSpec, J_edge_codes: jax.Array,
     e = spec.graph.edges
     codes = _saturate_edge_codes(spec, jnp.asarray(J_edge_codes))
     if spec.sparse_native:
-        D = nbr_idx.shape[0]
-        n = spec.graph.n_nodes
-        J_slots = (jnp.zeros((D, n), codes.dtype)
-                   .at[slot_ij, e[:, 0]].set(codes)
-                   .at[slot_ji, e[:, 1]].set(codes))
+        J_slots = scatter_edge_slots(codes, e, slot_ij, slot_ji,
+                                     nbr_idx.shape[0], spec.graph.n_nodes)
         chip = program_weights_sparse(
             J_slots, h_codes, jnp.abs(J_slots) > 0, spec.mismatch,
             spec.hw, jnp.asarray(nbr_idx), jnp.asarray(nbr_mask))
@@ -199,6 +204,22 @@ def program_master(spec: SamplerSpec, Jm: jax.Array, hm: jax.Array,
                              tables=tables)
     return program(spec, quantize_codes(Jm), quantize_codes(hm),
                    tables=tables)
+
+
+def program_chip(spec: SamplerSpec, prog: Program, *, tables=None
+                 ) -> EffectiveChip:
+    """Program a runtime `Program` through the spec's analog model.
+
+    This is the weight-streaming path: it runs *inside* the jitted
+    sampling closures with the program's leaves as traced operands, so a
+    new program never retraces — the scatter + DAC transfer + compression
+    chain is part of the compiled executable and only its inputs change.
+    A program-borne ``mismatch`` overrides the spec's draw (same pytree
+    structure required; `Session.make_program` enforces the type).
+    """
+    if prog.mismatch is not None:
+        spec = spec.replace(mismatch=prog.mismatch)
+    return program_edges(spec, prog.J_codes, prog.h_codes, tables=tables)
 
 
 class Session:
@@ -431,6 +452,145 @@ class Session:
         return program_master(self.spec, Jm, hm, tables=self._nbr)
 
     # ------------------------------------------------------------------
+    # runtime weight streaming (program as operand, not constant)
+    # ------------------------------------------------------------------
+    def make_program(
+        self,
+        J_edge_codes: jax.Array,
+        h_codes: jax.Array,
+        *,
+        mismatch=None,
+        clamp_mask: jax.Array | None = None,
+        clamp_values: jax.Array | None = None,
+        betas: jax.Array | None = None,
+    ) -> Program:
+        """Package edge-list codes (E,) + bias codes (N,) as a runtime
+        `Program` for `sample_program` / `sample_fleet`.
+
+        Only shapes and the optional-field structure are compile-time;
+        the values stream into an already-compiled executable.  An
+        explicit ``mismatch`` must be the same type as the spec's (the
+        dense/sparse programming route is a static property of the
+        trace).
+        """
+        E, n = self.graph.n_edges, self.graph.n_nodes
+        J = jnp.asarray(J_edge_codes)
+        h = jnp.asarray(h_codes)
+        if J.shape != (E,):
+            raise ValueError(
+                f"J_edge_codes must be edge-list shaped ({E},), got "
+                f"{J.shape}; scatter dense codes to the edge list first")
+        if h.shape != (n,):
+            raise ValueError(f"h_codes must be ({n},), got {h.shape}")
+        if mismatch is not None and \
+                type(mismatch) is not type(self.spec.mismatch):
+            raise ValueError(
+                f"program mismatch type {type(mismatch).__name__} does "
+                f"not match the spec's "
+                f"{type(self.spec.mismatch).__name__}; the dense/sparse "
+                f"programming route is baked into the trace")
+        if clamp_mask is not None:
+            clamp_mask = jnp.asarray(clamp_mask)
+            if clamp_values is not None:
+                clamp_values = jnp.asarray(clamp_values, jnp.float32)
+        elif clamp_values is not None:
+            raise ValueError("clamp_values without clamp_mask")
+        if betas is not None:
+            betas = jnp.asarray(betas, jnp.float32)
+        return Program(J_codes=J, h_codes=h, mismatch=mismatch,
+                       clamp_mask=clamp_mask, clamp_values=clamp_values,
+                       betas=betas)
+
+    def sample_program(
+        self,
+        prog: Program,
+        m: jax.Array,
+        noise_state: jax.Array,
+        betas: jax.Array | None = None,
+        *,
+        collect: bool = False,
+    ) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+        """`sample`, with the chip programmed *inside* the jit from a
+        runtime `Program`: (m', state', traj|None).
+
+        One executable per optional-field structure serves every program
+        on this Session's spec — swapping problems is an O(E) host→device
+        copy, never a retrace (benchmarks `weight_streaming` section).
+        Beta priority: explicit ``betas`` arg > ``prog.betas`` > the
+        spec's schedule.
+        """
+        if betas is None and prog.betas is None:
+            betas = self._betas(None)
+        elif betas is not None:
+            betas = jnp.asarray(betas, jnp.float32)
+        fn = self._fn(("sample_program", collect),
+                      self._build_sample_program, collect)
+        return fn(prog, m, noise_state, betas)
+
+    def _build_sample_program(self, collect: bool):
+        def impl(prog, m, ns, betas):
+            chip = program_chip(self.spec, prog, tables=self._nbr)
+            b = betas if betas is not None else prog.betas
+            m, cm, cv = self._merge_faults(m, prog.clamp_mask,
+                                           prog.clamp_values)
+            if self._engine is not None:
+                return self._engine.sample(chip, m, ns, b, cm, cv, collect)
+            return pbit.gibbs_sample(
+                chip, self._color, m, b, ns, self._noise_step,
+                clamp_mask=cm, clamp_values=cv, collect=collect,
+                backend=self.backend, interpret=self.interpret,
+                flip_fn=self._flip_fn)
+
+        # one jit: a changed optional-field structure (clamps, mismatch,
+        # program-borne betas) retraces, changed values never do
+        return jax.jit(impl)
+
+    def sample_fleet(
+        self,
+        progs: Program,
+        m: jax.Array,
+        noise_state: jax.Array,
+        betas: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+        """Run a stacked K-program fleet (see `api.stack_programs`)
+        through ONE executable: (m'[K, B, N], state'[K, ...], None).
+
+        ``m`` / ``noise_state`` carry a leading K axis; ``betas`` (or the
+        spec schedule) is shared across the fleet unless the programs
+        carry their own.  Fused backends demote to their bit-exact scan
+        siblings under vmap, so the fleet result is bit-identical to K
+        sequential `sample_program` calls.  Single-device only — shard a
+        fleet across a mesh by giving each device its own Session.
+        """
+        if self._engine is not None:
+            raise ValueError(
+                "sample_fleet runs on single-device Sessions; a sharded "
+                "mesh already owns the device axis — run one fleet per "
+                "device instead")
+        if betas is not None:
+            betas = jnp.asarray(betas, jnp.float32)
+        elif progs.betas is None:
+            betas = self._betas(None)
+        fn = self._fn(("sample_fleet",), self._build_sample_fleet)
+        return fn(progs, m, noise_state, betas)
+
+    def _build_sample_fleet(self):
+        backend = _FLEET_BACKEND.get(self.backend, self.backend)
+
+        def one(prog, m, ns, betas):
+            chip = program_chip(self.spec, prog, tables=self._nbr)
+            b = betas if betas is not None else prog.betas
+            m, cm, cv = self._merge_faults(m, prog.clamp_mask,
+                                           prog.clamp_values)
+            return pbit.gibbs_sample(
+                chip, self._color, m, b, ns, self._noise_step,
+                clamp_mask=cm, clamp_values=cv, collect=False,
+                backend=backend, interpret=self.interpret,
+                flip_fn=self._flip_fn)
+
+        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None)))
+
+    # ------------------------------------------------------------------
     # sampling closures
     # ------------------------------------------------------------------
     def sample(
@@ -553,6 +713,13 @@ class Session:
         (Jm, hm, m, noise_state, vel, metrics) with (E,) edge-list master
         couplings; both Gibbs phases and the weight update run inside one
         jit through this session's backend.
+
+        The mismatch draw enters the jit as an *operand* (the returned
+        step partially applies the spec's draw; ``step.with_mismatch``
+        exposes the raw (mismatch, Jm, hm, ...) entry), so the compiled
+        executable carries no chip-instance constants — the substrate of
+        `make_cd_fleet_step` and of zero-retrace hardware-in-the-loop
+        epochs.
         """
         if cfg.chains != self.spec.chains:
             raise ValueError(
@@ -566,13 +733,62 @@ class Session:
         return self._fn(key, self._build_cd_step, cfg,
                         np.asarray(visible_idx))
 
+    def make_cd_fleet_step(self, cfg, visible_idx: np.ndarray):
+        """Build the K-replica hardware-aware CD step: one executable,
+        per-chip mismatch draws streamed in as operands.
+
+        Returns step(mismatches, Jm, hm, data_vis, m, noise_state, vel)
+        -> (Jm, hm, m, noise_state, vel, metrics) where every argument
+        except ``data_vis`` (the shared data batch) carries a leading K
+        fleet axis: ``mismatches`` is a stacked draw (see
+        `core.cd.PBitMachine.fleet_mismatch`), Jm (K, E), hm (K, N),
+        m (K, B, N), vel a pair of (K, E)/(K, N) arrays; metrics come
+        back stacked per chip.  Fused backends demote to their bit-exact
+        scan siblings under vmap, so fleet epochs match K sequential
+        per-chip epochs bit-for-bit.
+        """
+        if self._engine is not None:
+            raise ValueError(
+                "fleet CD runs on single-device Sessions; a sharded mesh "
+                "already owns the device axis — run one fleet per device")
+        if cfg.chains != self.spec.chains:
+            raise ValueError(
+                f"CDConfig.chains={cfg.chains} but this Session was "
+                f"compiled for chains={self.spec.chains}; build the "
+                f"session with chains=cfg.chains")
+        key = ("cd_fleet", cfg.lr, cfg.cd_k, cfg.pos_sweeps, cfg.burn_in,
+               cfg.h_lr_scale, cfg.weight_decay, cfg.persistent,
+               cfg.momentum,
+               tuple(int(i) for i in np.asarray(visible_idx)))
+
+        def build():
+            step_mm = self._build_cd_step_mm(cfg, np.asarray(visible_idx),
+                                             fleet=True)
+            return jax.jit(jax.vmap(step_mm,
+                                    in_axes=(0, 0, 0, None, 0, 0, 0)))
+
+        return self._fn(key, build)
+
     def _build_cd_step(self, cfg, visible_idx):
+        step_mm = jax.jit(self._build_cd_step_mm(cfg, visible_idx,
+                                                 fleet=False))
+        mm = self.spec.mismatch
+
+        def step(Jm, hm, data_vis, m, noise_state, vel):
+            return step_mm(mm, Jm, hm, data_vis, m, noise_state, vel)
+
+        step.with_mismatch = step_mm
+        return step
+
+    def _build_cd_step_mm(self, cfg, visible_idx, *, fleet: bool):
         from repro.core.hardware import WMAX, WMIN
 
         n = self.graph.n_nodes
         vis = jnp.asarray(visible_idx)
         clamp_mask = jnp.zeros((n,), bool).at[vis].set(True)
         beta = self.spec.beta
+        backend = (_FLEET_BACKEND.get(self.backend, self.backend)
+                   if fleet else self.backend)
 
         def phase(chip, m0, n_sweeps, ns, cm=None, cv=None):
             if self._engine is not None:
@@ -584,13 +800,13 @@ class Session:
             return pbit.gibbs_stats(
                 chip, self._color, m0, beta, n_sweeps, cfg.burn_in, ns,
                 self._noise_step, self._edges, clamp_mask=cm,
-                clamp_values=cv, backend=self.backend,
+                clamp_values=cv, backend=backend,
                 interpret=self.interpret, flip_fn=self._flip_fn)
 
-        @jax.jit
-        def step(Jm, hm, data_vis, m, noise_state, vel):
-            chip = self.program_edges(quantize_codes(Jm),
-                                      quantize_codes(hm))
+        def step(mismatch, Jm, hm, data_vis, m, noise_state, vel):
+            chip = program_edges(self.spec.replace(mismatch=mismatch),
+                                 quantize_codes(Jm), quantize_codes(hm),
+                                 tables=self._nbr)
             clamp_values = jnp.zeros((cfg.chains, n), jnp.float32)
             clamp_values = clamp_values.at[:, vis].set(data_vis)
 

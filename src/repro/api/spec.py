@@ -383,36 +383,36 @@ class SamplerSpec:
         shape bucket (rows/cols/k/mask — node ids and edge lists are
         derived from these deterministically), the effective partition +
         sync + mesh device assignment, the schedule/chains/beta/decimation
-        statics, and a value digest of the hw constants and mismatch
-        arrays (they are baked into the jitted closures as constants, so
-        a shape-only key would alias distinct executables).  The serving
-        layer (`repro.serve`) keys its LRU Session cache on this: a
-        13-spin adder and a 440-spin chip embedded into the same shape
-        bucket — same bucket graph, same bucket mismatch — hit the same
-        compiled executable and differ only in the programmed chip
-        arguments.  Env vars are consulted exactly as Session compile
-        would (via `resolve_backend`/`resolve_interpret`), so the key is
+        statics, and the mismatch *structure* (type + per-leaf
+        dtype/shape — the dense/sparse programming route and every array
+        extent in the trace, but never the drawn values).  This is a pure
+        shape-bucket key: chips, `Program`s, and mismatch draws are
+        runtime operands of the compiled closures
+        (`Session.sample_program`, the CD step's `with_mismatch` entry),
+        so two specs differing only in drawn values — two chip instances
+        of one SKU — share one executable and stream their programs into
+        it.  The analog `HardwareConfig` scalars still bake into the
+        programming arithmetic as closure constants and are deliberately
+        NOT keyed: a cache mixing HardwareConfigs must key on hw
+        separately (the serving layer holds a single service-wide
+        HardwareConfig, so its bucket key stays safe).  The serving layer
+        (`repro.serve`) keys its LRU Session cache on this: a 13-spin
+        adder and a 440-spin chip embedded into the same shape bucket hit
+        the same compiled executable and differ only in the streamed
+        program.  Env vars are consulted exactly as Session compile would
+        (via `resolve_backend`/`resolve_interpret`), so the key is
         computed in the same environment the Session is built in.
         """
-        import hashlib
-
         g = self.graph
         graph_sig = ("chimera", int(g.rows), int(g.cols), int(g.k),
                      tuple(sorted(tuple(c) for c in (g.masked_cells or ()))),
                      int(g.n_nodes), int(g.edges.shape[0]))
-        h = hashlib.sha1()
-        for f in dataclasses.fields(self.hw):
-            h.update(repr((f.name, getattr(self.hw, f.name))).encode())
-        hw_sig = h.hexdigest()[:16]
-        h = hashlib.sha1()
-        for path, leaf in jax.tree_util.tree_flatten_with_path(
-                self.mismatch)[0]:
-            arr = jax.device_get(leaf)
-            h.update(jax.tree_util.keystr(path).encode())
-            h.update(str(arr.dtype).encode())
-            h.update(str(arr.shape).encode())
-            h.update(arr.tobytes())
-        mm_sig = (type(self.mismatch).__name__, h.hexdigest()[:16])
+        mm_sig = (type(self.mismatch).__name__,
+                  tuple((jax.tree_util.keystr(path), str(leaf.dtype),
+                         tuple(int(d) for d in leaf.shape))
+                        for path, leaf in
+                        jax.tree_util.tree_flatten_with_path(
+                            self.mismatch)[0]))
         mesh_sig = None
         if self.mesh is not None:
             mesh_sig = (tuple(self.mesh.axis_names),
@@ -429,7 +429,7 @@ class SamplerSpec:
             sched_sig = (type(self.schedule).__name__,
                          tuple(sorted(dataclasses.asdict(
                              self.schedule).items())))
-        return (graph_sig, hw_sig, mm_sig, self.noise,
+        return (graph_sig, mm_sig, self.noise,
                 resolve_backend(self), int(self.chains), float(self.beta),
                 float(self.w_scale), int(self.decimation),
                 bool(self.attach_sparse), resolve_interpret(self),

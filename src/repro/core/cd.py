@@ -177,6 +177,28 @@ class PBitMachine:
         return api.program_master(self.sampler_spec(), Jm, hm,
                                   tables=self.neighbor_tables())
 
+    def fleet_mismatch(self, key: jax.Array, n_chips: int):
+        """Draw a stacked (K, ...) fleet of chip-instance mismatches.
+
+        Every leaf gains a leading ``n_chips`` axis; the result feeds the
+        fleet axis directly (`make_cd_fleet_step`,
+        `api.Session.make_cd_fleet_step`), running K virtual chips of
+        this machine's SKU through one compiled executable.  Draw k
+        equals `sample_mismatch[_sparse](split(key)[k], ...)`, so a
+        fleet member is bit-identical to a standalone machine built from
+        the same subkey.
+        """
+        keys = jax.random.split(key, n_chips)
+        if self.sparse_native:
+            nbr_idx, _ = self.graph.neighbor_table()
+            draws = [sample_mismatch_sparse(k, self.graph.n_nodes,
+                                            nbr_idx.shape[0], self.hw)
+                     for k in keys]
+        else:
+            draws = [sample_mismatch(k, self.graph.n_nodes, self.hw)
+                     for k in keys]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *draws)
+
     def noise_fn(self, key: jax.Array, batch: int):
         """Legacy noise constructor: (state, step).  New code should use
         ``session().noise_state(key)`` — the Session owns the step fn."""
@@ -218,6 +240,26 @@ def make_cd_step(machine: PBitMachine, cfg: CDConfig,
     so the weight update is a pure O(E) axpy.
     """
     return machine.session(chains=cfg.chains).make_cd_step(cfg, visible_idx)
+
+
+def make_cd_fleet_step(machine: PBitMachine, cfg: CDConfig,
+                       visible_idx: np.ndarray):
+    """Build the K-replica CD step (shim over `Session.make_cd_fleet_step`).
+
+    Trains K virtual chip instances — K mismatch draws of the machine's
+    SKU, stacked by `PBitMachine.fleet_mismatch` — through ONE compiled
+    executable, each with its own master weights, chains, and noise
+    stream but a shared data batch:
+
+        step(mismatches, Jm[K,E], hm[K,N], data_vis, m[K,B,N],
+             noise_state[K,...], vel) -> same, stacked
+
+    Zero retraces across epochs *and* across chips: the mismatch is a
+    streamed operand, not a baked constant, so fleet-scale
+    hardware-aware learning costs one compile.
+    """
+    return machine.session(chains=cfg.chains).make_cd_fleet_step(
+        cfg, visible_idx)
 
 
 def sample_visible_dist(machine: PBitMachine, Jm, hm,

@@ -25,7 +25,11 @@ wants.  This module is the sharded execution layer behind
     approximations measured against it (docs/sharding.md §Sync
     policies).  The Gibbs-chain axis shards the same way (CD's
     embarrassingly parallel dimension); the (E,) edge-list moments are
-    psum-reduced once per phase.
+    psum-reduced once per phase.  Chips enter every engine entry point as
+    *traced operands* (`_chip_parts` is pure jnp on static tables), so
+    runtime weight streaming works through the sharded path unchanged:
+    one compiled executable per (graph-shape, partition, sync) bucket
+    serves every `api.Program` (`Session.sample_program`).
 
 The old structure-of-arrays pod lattice (`LatticeSpec`/`make_sk_lattice`)
 remains as the O(N) *instance generator* for SK-style lattices, but its
@@ -416,10 +420,21 @@ class ShardedEngine:
 
     # -- global <-> parts layout ----------------------------------------
     def _chip_parts(self, chip: EffectiveChip) -> dict:
+        """Slice the chip into per-device (n_shards, ...) shard layouts.
+
+        Pure jnp gathers on static index tables, so this runs *inside*
+        the Session's jitted closures with the chip as a traced operand —
+        which is what threads runtime weight streaming through the
+        sharded engine for free: a `Program` programmed in-jit
+        (`Session.sample_program`) flows through here into the
+        shard_map'd sweep as sharded input, and a swapped program is a
+        new operand value, never a recompile.
+        """
         if chip.nbr_w is None or chip.nbr_idx is None:
             raise ValueError(
                 "sharded execution needs a chip carrying the slot layout "
-                "(program through the Session, or hardware.attach_sparse)")
+                "(program through the Session — e.g. Session.make_program "
+                "+ sample_program — or hardware.attach_sparse)")
         ids = self._part_ids
         return {
             "w": jnp.moveaxis(chip.nbr_w[:, ids], 1, 0),

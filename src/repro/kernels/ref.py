@@ -45,6 +45,24 @@ def pbit_half_sweep_ref(m, W, h, gain, off, rand_gain, comp_off,
                                  update_mask, beta, u)
 
 
+def scatter_edge_slots(codes, edges, slot_ij, slot_ji, degree, n_nodes):
+    """Scatter (E,) edge-list values into the (D, N) slot layout, both
+    directions: out[slot_ij[e], edges[e, 0]] = out[slot_ji[e], edges[e, 1]]
+    = codes[e].
+
+    This is the hot half of runtime weight streaming — it runs inside the
+    compiled sampling/CD closures with ``codes`` as a traced operand
+    (edges/slot tables are static), turning a program swap into one
+    O(E) scatter instead of a retrace.  ``codes`` may carry leading batch
+    axes (a stacked program fleet): the scatter applies to the trailing
+    edge axis.
+    """
+    codes = jnp.asarray(codes)
+    out = jnp.zeros(codes.shape[:-1] + (degree, n_nodes), codes.dtype)
+    return (out.at[..., slot_ij, edges[:, 0]].set(codes)
+            .at[..., slot_ji, edges[:, 1]].set(codes))
+
+
 def sparse_neuron_input(m, nbr_idx, nbr_w, h):
     """Eqn 1 on the fixed-degree slot layout: I = Σ_d w_d ⊙ m[:, idx_d] + h.
 

@@ -31,7 +31,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ref import field_decision_update, sparse_neuron_input
-from repro.kernels.sweep_fused import sweep_sparse_pallas
+from repro.kernels.sweep_fused import (
+    sweep_sparse_pallas,
+    sweep_sparse_stream_pallas,
+)
 
 
 def halo_exchange(
@@ -117,6 +120,8 @@ def fused_shard_sweeps(
     clamp_mask: jax.Array | None = None,    # (N_loc,) bool
     clamp_values: jax.Array | None = None,  # (B, N_loc)
     measured: jax.Array | None = None,      # (S,) moment weights
+    next_nbr_w: jax.Array | None = None,    # (D, N_loc) next program weights
+    next_h: jax.Array | None = None,        # (N_loc,) next program biases
     *,
     block_b: int = 128,
     interpret: bool = True,
@@ -133,10 +138,18 @@ def fused_shard_sweeps(
     global id ranges, so a single scalar ``col0`` places the whole block
     in the global noise grid.
 
-    Returns (m', noise_state') or, with ``measured``,
+    ``next_nbr_w``/``next_h`` switch the launch to the double-buffered
+    weight-streaming engine (`sweep_sparse_stream_pallas`): each shard's
+    slice of the NEXT program stages into a second VMEM slot while the
+    current program's sweeps run (mutually exclusive with ``measured`` —
+    a swapped program invalidates mid-grid moments).
+
+    Returns (m', noise_state'), with ``measured``
     (m', noise_state', s_sum[N_loc], c_slots[D, N_ext]) — raw sums over
     (chains × measured sweeps); ``c_slots[d, i] = Σ m_i·m_ext[idx[d, i]]``
-    with i ext-local (boundary edges read the frozen halo).
+    with i ext-local (boundary edges read the frozen halo) — or, with a
+    next program, (m', noise_state', staged_w[D, N_loc], staged_h[N_loc])
+    ready to be the following launch's resident program slice.
     """
     B, n_loc = m_loc.shape
     H = halo_up.shape[1]
@@ -160,6 +173,21 @@ def fused_shard_sweeps(
                        ((0, 0), (0, pad2)))
     coords = jnp.stack([jnp.asarray(row0, jnp.uint32),
                         jnp.asarray(col0, jnp.uint32)])
+    if next_nbr_w is not None:
+        if measured is not None:
+            raise ValueError(
+                "program streaming excludes in-kernel moment "
+                "accumulation (see sweep_sparse_stream_pallas)")
+        nw_e = jnp.pad(jnp.asarray(next_nbr_w, jnp.float32),
+                       ((0, 0), (0, pad2)))
+        m_out, ns, staged_w, staged_h = sweep_sparse_stream_pallas(
+            m_ext, idx_e, w_e, row(h), row(gain), row(off), row(rand_gain),
+            row(comp_off), jnp.concatenate([mask0, zb]),
+            jnp.concatenate([mask1, zb]), betas, noise_state,
+            nw_e, row(next_h), clamp_mask=cm_e, clamp_values=cv_e,
+            coord_offset=coords, block_b=block_b, interpret=interpret)
+        return (m_out[:, :n_loc], ns, staged_w[:, :n_loc],
+                staged_h[:n_loc])
     outs = sweep_sparse_pallas(
         m_ext, idx_e, w_e, row(h), row(gain), row(off), row(rand_gain),
         row(comp_off), jnp.concatenate([mask0, zb]),

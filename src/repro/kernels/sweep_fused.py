@@ -34,6 +34,13 @@ Two weight layouts share the kernel body:
     ascending-neighbor order, making the result bit-exact against both the
     sparse jnp ref and (zeros being additive identities) the dense path.
 
+`sweep_sparse_stream_pallas` adds runtime weight streaming to the sparse
+engine: the NEXT program's (D, N)/(N,) weights ride the same launch,
+stage into a second VMEM slot at grid step 0 (overlapping the current
+program's S sweeps — the SpikeHard DMA model), and come back as staged
+outputs aliased in place over the inputs, ready to be the next launch's
+resident program.
+
 Grid: (B/tb,) over batch tiles; each program owns its rows for all S
 sweeps.  Moment/histogram scratch accumulates across the (sequential)
 batch-tile grid and is flushed to the output on the last program, the same
@@ -75,7 +82,7 @@ MAX_HIST_VISIBLE = 12  # one-hot reduction over 2^nv bins; keep it VMEM-sane
 def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
             noise_mode: str, has_clamp: bool, accumulate: bool,
             collect_hist: bool, decimation: int, sparse: bool, D: int,
-            NBp: int, has_coords: bool):
+            NBp: int, has_coords: bool, stream: bool = False):
     it = iter(refs)
     m0_ref = next(it)
     if sparse:
@@ -94,16 +101,23 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
     perm_ref = next(it) if noise_mode == NOISE_LFSR else None
     coords_ref = next(it) if has_coords else None
     noise_in_ref = next(it)
+    if stream:
+        next_w_ref = next(it)                 # (Dp, Np) next program weights
+        next_h_ref = next(it)                 # (1, Np) next program biases
     m_out_ref = next(it)
     noise_out_ref = next(it)
     if accumulate:
         ssum_out_ref, csum_out_ref = next(it), next(it)
     if collect_hist:
         hist_out_ref = next(it)
+    if stream:
+        staged_w_out_ref, staged_h_out_ref = next(it), next(it)
     if accumulate:
         ssum_ref, csum_ref = next(it), next(it)
     if collect_hist:
         hist_ref = next(it)
+    if stream:
+        slot_w_ref, slot_h_ref = next(it), next(it)
 
     i = pl.program_id(0)
 
@@ -116,6 +130,19 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
         @pl.when(i == 0)
         def _zero_hist():
             hist_ref[...] = jnp.zeros_like(hist_ref)
+    if stream:
+        # double-buffered program upload (the SpikeHard DMA model): the
+        # NEXT program's weights stream into the second VMEM slot up
+        # front, before this launch's S resident sweeps touch the loop —
+        # independent of the sweep dataflow, so the copy overlaps compute
+        # on hardware.  Flushed to the staged outputs on the last block;
+        # the host feeds them straight back as the following launch's
+        # resident program (zero-copy: the next-program inputs alias the
+        # staged outputs via input_output_aliases).
+        @pl.when(i == 0)
+        def _stage_next_program():
+            slot_w_ref[...] = next_w_ref[...]
+            slot_h_ref[...] = next_h_ref[...]
 
     if not sparse:
         w = w_ref[...]
@@ -221,6 +248,11 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
         @pl.when(i == n_b - 1)
         def _flush_hist():
             hist_out_ref[...] = hist_ref[...]
+    if stream:
+        @pl.when(i == n_b - 1)
+        def _flush_staged_program():
+            staged_w_out_ref[...] = slot_w_ref[...]
+            staged_h_out_ref[...] = slot_h_ref[...]
 
 
 def _launch(
@@ -228,12 +260,25 @@ def _launch(
     mask0, mask1, betas, noise_state, clamp_mask, clamp_values, measured,
     visible_idx, *, sparse, noise_mode, decimation, gather_perm,
     accumulate, collect_hist, n_visible, block_b, interpret,
-    coord_offset=None,
+    coord_offset=None, next_nbr_w=None, next_h=None,
 ):
     """Shared plumbing for the dense and sparse sweep-resident engines."""
     B, N = m.shape
     S = betas.shape[0]
     out_dtype = m.dtype
+    stream = next_nbr_w is not None
+    if stream:
+        if not sparse or noise_mode != NOISE_COUNTER:
+            raise ValueError(
+                "program streaming runs on the sparse counter-noise "
+                "engine (the launch-resident serving configuration)")
+        if next_h is None:
+            raise ValueError("next_nbr_w without next_h")
+        if accumulate or collect_hist or measured is not None:
+            raise ValueError(
+                "program streaming excludes in-kernel moment/histogram "
+                "accumulation — a swapped program invalidates the "
+                "accumulators mid-grid")
     # clamp_mask alone (freeze nodes at their current spins) is fully
     # handled by excluding the nodes from mask0/mask1; the kernel only
     # needs the clamp inputs when values are re-imposed every sweep
@@ -261,6 +306,9 @@ def _launch(
                      jnp.zeros(c_shape, jnp.float32)]
         if collect_hist:
             outs.append(jnp.zeros((NB,), jnp.float32))
+        if stream:
+            outs += [jnp.asarray(next_nbr_w, jnp.float32),
+                     jnp.asarray(next_h, jnp.float32)]
         return tuple(outs)
 
     Np = _round_up(N, 128)
@@ -358,6 +406,21 @@ def _launch(
         noise_out_shape = jax.ShapeDtypeStruct((Bp, Cp), jnp.uint32)
         noise_out_spec = pl.BlockSpec((tb, Cp), lambda i: (i, 0))
 
+    aliases = {}
+    if stream:
+        # the next program rides the SAME launch as the current sweeps:
+        # two O(D·N) operands appended after the noise state, aliased to
+        # the staged outputs (in-place buffer handoff — the upload costs
+        # no extra HBM round-trip, matching the chip's SPI-write-during-
+        # anneal overlap)
+        i_next = len(args)
+        in_specs += [pl.BlockSpec((Dp, Np), lambda i: (0, 0)),
+                     pl.BlockSpec((1, Np), lambda i: (0, 0))]
+        args += [_pad_axis(_pad_axis(
+            jnp.asarray(next_nbr_w, jnp.float32), Dp, 0), 128, 1),
+            row(next_h)]
+        aliases = {i_next: 2, i_next + 1: 3}
+
     out_shape = [jax.ShapeDtypeStruct((Bp, Np), out_dtype), noise_out_shape]
     out_specs = [pl.BlockSpec((tb, Np), lambda i: (i, 0)), noise_out_spec]
     scratch = []
@@ -372,18 +435,28 @@ def _launch(
         out_shape.append(jax.ShapeDtypeStruct((1, NBp), jnp.float32))
         out_specs.append(pl.BlockSpec((1, NBp), lambda i: (0, 0)))
         scratch.append(_VMEM((1, NBp), jnp.float32))
+    if stream:
+        out_shape += [jax.ShapeDtypeStruct((Dp, Np), jnp.float32),
+                      jax.ShapeDtypeStruct((1, Np), jnp.float32)]
+        out_specs += [pl.BlockSpec((Dp, Np), lambda i: (0, 0)),
+                      pl.BlockSpec((1, Np), lambda i: (0, 0))]
+        scratch += [_VMEM((Dp, Np), jnp.float32),
+                    _VMEM((1, Np), jnp.float32)]
 
     kw = {}
     if not interpret and _COMPILER_PARAMS is not None:
         kw["compiler_params"] = _COMPILER_PARAMS(
             dimension_semantics=("arbitrary",))
+    if aliases:
+        kw["input_output_aliases"] = aliases
     outs = pl.pallas_call(
         functools.partial(
             _kernel, S=S, tb=tb, Np=Np, n_b=n_b, B=B,
             noise_mode=noise_mode, has_clamp=has_clamp,
             accumulate=accumulate, collect_hist=collect_hist,
             decimation=decimation, sparse=sparse,
-            D=D if sparse else 0, NBp=NBp, has_coords=has_coords),
+            D=D if sparse else 0, NBp=NBp, has_coords=has_coords,
+            stream=stream),
         grid=(n_b,),
         in_specs=in_specs,
         out_specs=tuple(out_specs),
@@ -405,6 +478,10 @@ def _launch(
         k += 2
     if collect_hist:
         result.append(outs[k][0, :NB])
+        k += 1
+    if stream:
+        result.append(outs[k][:D, :N])
+        result.append(outs[k + 1][0, :N])
     return tuple(result)
 
 
@@ -510,3 +587,57 @@ def sweep_sparse_pallas(
         gather_perm=gather_perm, accumulate=accumulate,
         collect_hist=collect_hist, n_visible=n_visible, block_b=block_b,
         interpret=interpret, coord_offset=coord_offset)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("decimation", "block_b", "interpret"),
+)
+def sweep_sparse_stream_pallas(
+    m: jax.Array,                 # (B, N) spins in {-1, +1}
+    nbr_idx: jax.Array,           # (D, N) int32 neighbor table
+    nbr_w: jax.Array,             # (D, N) CURRENT program's slot weights
+    h: jax.Array,                 # (N,)   CURRENT program's biases
+    gain: jax.Array,
+    off: jax.Array,
+    rand_gain: jax.Array,
+    comp_off: jax.Array,
+    mask0: jax.Array,
+    mask1: jax.Array,
+    betas: jax.Array,             # (S, B)
+    noise_state: jax.Array,       # (2,) uint32 counter state
+    next_nbr_w: jax.Array,        # (D, N) NEXT program's slot weights
+    next_h: jax.Array,            # (N,)   NEXT program's biases
+    clamp_mask: jax.Array | None = None,
+    clamp_values: jax.Array | None = None,
+    coord_offset: jax.Array | None = None,
+    *,
+    decimation: int = 8,
+    block_b: int = 128,
+    interpret: bool = True,
+):
+    """`sweep_sparse_pallas` with a double-buffered program upload: run S
+    resident sweeps of the CURRENT program while the NEXT program's
+    weights stream into a second VMEM slot.
+
+    Returns ``(m', noise_state', staged_w, staged_h)`` where
+    ``staged_w``/``staged_h`` are the next program, already device-
+    resident: feed them back as this call's ``nbr_w``/``h`` on the next
+    launch.  The next-program inputs alias the staged outputs
+    (`input_output_aliases`), so the handoff is an in-place buffer swap,
+    and the stage copy runs at grid step 0 — independent of the sweep
+    loop, overlapping compute on hardware (the SpikeHard DMA model: the
+    chip accepts the next problem's SPI write while the current anneal
+    runs).  Counter noise only, no in-kernel accumulation (a swapped
+    program would invalidate mid-grid moments).  Per-program results are
+    bit-identical to serialized `sweep_sparse_pallas` launches — the
+    benchmark ``weight_streaming`` section measures the upload overlap.
+    """
+    return _launch(
+        m, None, nbr_idx, nbr_w, h, gain, off, rand_gain, comp_off,
+        mask0, mask1, betas, noise_state, clamp_mask, clamp_values,
+        None, None,
+        sparse=True, noise_mode=NOISE_COUNTER, decimation=decimation,
+        gather_perm=None, accumulate=False, collect_hist=False,
+        n_visible=0, block_b=block_b, interpret=interpret,
+        coord_offset=coord_offset, next_nbr_w=next_nbr_w, next_h=next_h)

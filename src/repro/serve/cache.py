@@ -16,12 +16,17 @@ make reuse systematic:
   problem.  One compiled executable per bucket serves every graph that
   fits it — the ROADMAP "runtime weight streaming" idea, realized at the
   serving layer.
-* **An LRU over `SamplerSpec.fingerprint()`.**  The fingerprint
-  canonicalizes everything the executable depends on (graph bucket,
-  resolved backend/interpret, partition/sync/mesh, hw + mismatch
-  digests); the service holds one bucket-sized spec per fingerprint and
-  evicts least-recently-used Sessions under memory pressure.  Hit/miss/
-  eviction counters feed the `serving` benchmark's compile-cache row.
+* **An LRU over `SamplerSpec.fingerprint()`.**  The fingerprint is a
+  pure shape-bucket key (graph bucket, resolved backend/interpret,
+  partition/sync/mesh, mismatch *structure* — never drawn values): the
+  programmed chip is a runtime operand of the cached Session's compiled
+  closures (`api.Program` + `Session.sample_program`), so a cache entry
+  needs no per-program state at all — dispatch is "scatter codes, call".
+  The service holds one bucket-sized spec per fingerprint and evicts
+  least-recently-used Sessions under memory pressure.  Hit/miss/
+  eviction counters feed the `serving` benchmark's compile-cache row;
+  its `program_swap` vs `recompile` split measures what the operand
+  design buys.
 """
 from __future__ import annotations
 
@@ -136,27 +141,20 @@ def program_digest(bucket_key: tuple[int, int], J_codes, h_codes,
 
 @dataclasses.dataclass
 class CacheEntry:
-    """One compiled Session plus the statics needed to (re)program it."""
+    """One compiled Session — programs stream in at call time.
+
+    There is deliberately no per-program state here: the programmed chip
+    used to live in a per-entry digest->EffectiveChip LRU, but with
+    `Session.sample_program` the program is an operand of the compiled
+    executable, so dispatch re-scatters the O(E) codes every launch and
+    the cache's only job is holding compiled Sessions.
+    """
 
     session: Any                 # api.Session
     spec: Any                    # api.SamplerSpec (bucket-sized)
     embeddable: ChimeraGraph     # the bucket graph
     meshed: bool                 # compiled against a device mesh?
     build_s: float               # wall-clock spent constructing + warming
-    chips: "OrderedDict[str, Any]" = dataclasses.field(
-        default_factory=OrderedDict)  # program digest -> EffectiveChip
-
-    _MAX_CHIPS = 32
-
-    def chip_for(self, digest: str, build: Callable[[], Any]) -> Any:
-        if digest in self.chips:
-            self.chips.move_to_end(digest)
-            return self.chips[digest]
-        chip = build()
-        self.chips[digest] = chip
-        while len(self.chips) > self._MAX_CHIPS:
-            self.chips.popitem(last=False)
-        return chip
 
 
 class SessionCache:

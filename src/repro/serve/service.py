@@ -552,18 +552,19 @@ class SamplerService:
         self._check_shards()
         head = batch[0]
         fp, entry = self._entry_for(head.bshape)
-        chip = entry.chip_for(
-            head.digest,
-            lambda: entry.session.program_edges(
-                jnp.asarray(head.Jb), jnp.asarray(head.hb)))
         bg = entry.embeddable
         km, kn = jax.random.split(key)
         m0 = pbit.random_spins(km, self.capacity_chains, bg.n_nodes)
         ns = entry.session.noise_state(kn)
         cm, cv = self._assemble_clamps(batch, bg)
-        m, _, _ = entry.session.sample(
-            chip, m0, ns, jnp.asarray(head.betas),
+        # scatter codes, call: the program (codes + clamps) is a runtime
+        # operand of the bucket Session's one compiled executable — no
+        # per-digest chip cache, no retrace on a new tenant problem
+        prog = entry.session.make_program(
+            jnp.asarray(head.Jb), jnp.asarray(head.hb),
             clamp_mask=cm, clamp_values=cv)
+        m, _, _ = entry.session.sample_program(
+            prog, m0, ns, jnp.asarray(head.betas))
         # materialize on the host *inside* the attempt: a shard dying
         # mid-launch surfaces here, where the replay machinery can see it
         return np.asarray(m), fp, entry

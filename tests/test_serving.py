@@ -101,9 +101,12 @@ class TestFingerprint:
         assert api.spec_fingerprint(spec.replace(backend="auto")) == \
             api.spec_fingerprint(spec.replace(backend=resolved))
 
-    def test_fingerprint_sees_mismatch_values(self):
-        """Mismatch arrays are baked into compiled closures as constants;
-        two different virtual chips must not alias one cache entry."""
+    def test_fingerprint_is_shape_bucket_key(self):
+        """Programs and mismatch draws are runtime operands of the
+        compiled closures (`Session.sample_program`), so two chip
+        instances of one SKU must SHARE a cache entry; only the mismatch
+        *structure* (dense vs sparse — a different programming route in
+        the trace) may discriminate."""
         from repro.core.cd import PBitMachine
         from repro.core.hardware import HardwareConfig
         g = make_chimera(1, 1)
@@ -116,7 +119,15 @@ class TestFingerprint:
                              noise="counter", backend="sparse", chains=4)
         sb = api.SamplerSpec(graph=g, hw=hw, mismatch=b.mismatch,
                              noise="counter", backend="sparse", chains=4)
-        assert api.spec_fingerprint(sa) != api.spec_fingerprint(sb)
+        assert api.spec_fingerprint(sa) == api.spec_fingerprint(sb)
+        # a dense-mismatch spec traces a different programming route:
+        # its fingerprint must NOT alias the sparse one
+        dense = PBitMachine.create(g, jax.random.PRNGKey(0), hw,
+                                   noise="counter")
+        sd = api.SamplerSpec(graph=g, hw=hw, mismatch=dense.mismatch,
+                             noise="counter", backend="sparse", chains=4,
+                             attach_sparse=True)
+        assert api.spec_fingerprint(sd) != api.spec_fingerprint(sa)
 
 
 # ---------------------------------------------------------------------------
