@@ -297,7 +297,7 @@ def bench_sharded_sweep(quick: bool = False) -> dict:
                 plan, B, refresh_for_moments=True),
             "dense_w_replication_bytes": 4 * N * N,
             **{f"tpu_{k}": v for k, v in halo_vs_hbm_seconds(
-                halo // 2, hbm).items()},
+                halo // 2, hbm, exchanges=2.0).items()},
         }
         measure = not quick or N == 440
         if measure:
@@ -459,6 +459,168 @@ def bench_sync_policies(quick: bool = False) -> dict:
                     "per-sweep-launch barrier baseline vs resident "
                     "multi-sweep calls (docs/sharding.md §Sync policies)",
             "configs": rows}
+
+
+# ---------------------------------------------------------------------------
+# Kernel-resident halo exchange vs host-exchange dispatch
+# ---------------------------------------------------------------------------
+_HALO_WORKER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import json, time
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro import api
+    from repro.core.cd import PBitMachine
+    from repro.core.chimera import make_chimera, make_chip_graph
+    from repro.core.hardware import HardwareConfig
+
+    def time_calls(fn, reps=5):
+        jax.block_until_ready(fn())              # compile + warm
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2]
+
+    rows = []
+    for N, B, S in {configs}:
+        g = make_chip_graph() if N == 440 else \\
+            make_chimera(int(round((N / 8) ** 0.5)),
+                         int(round((N / 8) ** 0.5)))
+        mesh = jax.make_mesh((2,), ("data",))
+        mach = PBitMachine.create(g, jax.random.PRNGKey(0),
+                                  HardwareConfig.ideal(), sparse=True,
+                                  noise="counter")
+        rng = np.random.default_rng(N)
+        codes = jnp.asarray(rng.integers(-60, 60, g.n_edges), jnp.int32)
+        h0 = jnp.zeros((g.n_nodes,), jnp.int32)
+        ses0 = api.Session(mach.sampler_spec(chains=B))
+        chip = ses0.program_edges(codes, h0)
+        m0 = ses0.random_spins(jax.random.PRNGKey(1))
+        ns = ses0.noise_state(jax.random.PRNGKey(2))
+        betas = jnp.full((S,), 0.7, jnp.float32)
+
+        def session(sync, backend):
+            sp = mach.sampler_spec(
+                chains=B, mesh=mesh, sync=sync,
+                partition=api.Partition(rows="data"))
+            return api.Session(sp.replace(backend=backend))
+
+        for k in (1, 4):
+            sync = api.Sync(halo_every=k, sweeps_per_launch=S)
+            fz = session(sync, "fused_sparse")
+            t_res = time_calls(
+                lambda: fz.sample(chip, m0, ns, betas)[0])
+            sc = session(sync, "sparse")
+            t_scan = time_calls(
+                lambda: sc.sample(chip, m0, ns, betas)[0])
+            row = {{"N": N, "halo_every": k, "sweeps_per_launch": S,
+                    "cpu_us_per_sweep_resident": t_res / S * 1e6,
+                    "cpu_us_per_sweep_segment_scan": t_scan / S * 1e6}}
+            if k == 1:
+                # the host-exchange baseline the kernel-resident path
+                # replaces: every exchange point ends the launch, so a
+                # k=1 policy dispatches one 1-sweep launch per sweep and
+                # pays the host round-trip on each boundary refresh
+                ps = session(api.Sync(halo_every=1, sweeps_per_launch=1),
+                             "sparse")
+                beta1 = jnp.full((1,), 0.7, jnp.float32)
+
+                def per_sweep():
+                    m, n2 = m0, ns
+                    for _ in range(S):
+                        m, n2, _ = ps.sample(chip, m, n2, beta1)
+                        jax.block_until_ready(m)
+                    return m
+                t_ps = time_calls(per_sweep)
+                row["cpu_us_per_sweep_host_exchange_baseline"] = \\
+                    t_ps / S * 1e6
+                row["speedup_vs_host_exchange"] = t_ps / t_res
+            rows.append(row)
+    print(json.dumps(rows))
+""")
+
+
+def bench_halo_fused(quick: bool = False) -> dict:
+    """The `halo_fused` section: kernel-resident halo exchange
+    (docs/kernels.md §In-kernel halo exchange) vs the host-exchange
+    paths, on a forced 2-device host.
+
+    For N = 440 / 2048 and halo_every k in {1, 4}: the fused
+    kernel-owned-exchange launch (one dispatch per S-sweep launch, the
+    exchange points refreshed inside the jitted graph) against (a) at
+    k=1 the host-exchange baseline — one 1-sweep launch per sweep,
+    blocking on each, which is what a frequent-refresh policy was forced
+    into before the kernel could own the exchange — and (b) the sparse
+    segment-scan engine under the identical policy (single dispatch,
+    host ppermute between segments).  The modeled halo bytes are
+    identical for the kernel-resident and host paths — the policy fixes
+    the transfer schedule; only who issues it changes."""
+    from repro import api
+    from repro.core.distributed import halo_bytes_per_sweep, \
+        plan_row_partition
+
+    shapes = {440: (16, 8), 2048: (8, 8)}
+    if quick:
+        shapes = {440: (8, 4)}
+    rows = []
+    for N, (B, S) in shapes.items():
+        g = _chimera_for(N)
+        plan = plan_row_partition(g, 2)
+        for k in (1, 4):
+            sync = api.Sync(halo_every=k, sweeps_per_launch=S)
+            rows.append({
+                "N": N, "B": B, "S": S, "n_devices": 2,
+                "halo_every": k,
+                "sweeps_per_launch": S,
+                "exchanges_per_sweep": sync.exchanges_per_sweep(),
+                # identical for kernel-resident and host exchange: the
+                # Sync policy fixes the bytes, the kernel only moves
+                # where the transfer is issued from
+                "halo_bytes_per_sweep": halo_bytes_per_sweep(
+                    plan, B, sync=sync),
+            })
+
+    measured = [(N, *shapes[N]) for N in shapes if not quick or N == 440]
+    out = subprocess.run(
+        [sys.executable, "-c", _HALO_WORKER.format(configs=measured)],
+        capture_output=True, text=True, timeout=2400,
+        cwd=Path(__file__).resolve().parent.parent,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    timed = json.loads(out.stdout.strip().splitlines()[-1])
+    by_key = {(r["N"], r["halo_every"]): r for r in timed}
+    for row in rows:
+        t = by_key.get((row["N"], row["halo_every"]))
+        if t is not None:
+            for key in ("cpu_us_per_sweep_resident",
+                        "cpu_us_per_sweep_segment_scan",
+                        "cpu_us_per_sweep_host_exchange_baseline",
+                        "speedup_vs_host_exchange"):
+                if key in t:
+                    row[key] = t[key]
+    return {"note": "kernel-resident halo exchange vs host-exchange "
+                    "dispatch on a forced 2-device host (docs/kernels.md "
+                    "§In-kernel halo exchange); halo bytes are modeled "
+                    "and identical for both paths",
+            "configs": rows}
+
+
+def _emit_halo(hf: dict) -> None:
+    k1 = [r for r in hf["configs"]
+          if r["N"] == 440 and r["halo_every"] == 1]
+    if k1 and "speedup_vs_host_exchange" in k1[0]:
+        r = k1[0]
+        emit("kernel_halo_fused_speedup_N440_k1",
+             r["speedup_vs_host_exchange"],
+             f"resident={r['cpu_us_per_sweep_resident']:.0f}us/sweep, "
+             f"host_exchange="
+             f"{r['cpu_us_per_sweep_host_exchange_baseline']:.0f}us, "
+             f"halo_bytes={r['halo_bytes_per_sweep']:.0f}")
 
 
 # ---------------------------------------------------------------------------
@@ -801,7 +963,18 @@ def _emit_streaming(ws: dict) -> None:
 
 
 def run(quick: bool = False, psl_only: bool = False,
-        streaming_only: bool = False) -> dict:
+        streaming_only: bool = False, halo_only: bool = False) -> dict:
+    if halo_only:
+        # regenerate just the kernel-resident halo-exchange section
+        # (cheap next to the full kernel sweeps) and merge it into the
+        # tracked root JSON
+        results = {"halo_fused": bench_halo_fused(quick)}
+        _emit_halo(results["halo_fused"])
+        save_json("halo_fused", results["halo_fused"])
+        if not quick:
+            _write_root_merge(results)
+        return results
+
     if psl_only:
         # regenerate just the PSL section (it is far cheaper than the
         # kernel sweeps) and merge it into the tracked root JSON
@@ -858,6 +1031,9 @@ def run(quick: bool = False, psl_only: bool = False,
     # sync policies: barrier vs relaxed halo exchange, measured + modeled
     results["sync_policies"] = bench_sync_policies(quick)
 
+    # kernel-resident halo exchange vs host-exchange dispatch
+    results["halo_fused"] = bench_halo_fused(quick)
+
     # PSL compiler: embedding overhead + forward correct-answer rate
     results["psl_embed"] = bench_psl_embed(quick)
 
@@ -893,6 +1069,7 @@ def run(quick: bool = False, psl_only: bool = False,
          f"{sy['1'].get('cpu_us_per_sweep_launch_baseline', 0):.0f}us, "
          f"halo_bytes inf/k1={sy['inf']['halo_bytes_per_sweep']:.0f}/"
          f"{sy['1']['halo_bytes_per_sweep']:.0f}")
+    _emit_halo(results["halo_fused"])
     for row in results["psl_embed"]["configs"]:
         emit(f"psl_{row['circuit']}_correct_rate", row["correct_rate"],
              f"chain_len={row['chain_length']}, "
@@ -915,6 +1092,8 @@ if __name__ == "__main__":
                     help="regenerate only the psl_embed section")
     ap.add_argument("--streaming-only", action="store_true",
                     help="regenerate only the weight_streaming section")
+    ap.add_argument("--halo-only", action="store_true",
+                    help="regenerate only the halo_fused section")
     args = ap.parse_args()
     run(quick=args.quick, psl_only=args.psl_only,
-        streaming_only=args.streaming_only)
+        streaming_only=args.streaming_only, halo_only=args.halo_only)

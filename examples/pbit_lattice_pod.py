@@ -130,9 +130,12 @@ if plan is not None:
     # local HBM traffic/sweep/device: slot weights + spins once per sweep
     hbm = (2 * 6 * graph.n_nodes * 4 + 2 * chains * graph.n_nodes * 4) \
         // max(n_dev, 1)
-    napkin = halo_vs_hbm_seconds(halo // max(n_dev - 1, 1), hbm)
+    napkin = halo_vs_hbm_seconds(halo // max(n_dev - 1, 1), hbm,
+                                 exchanges=sync.exchanges_per_sweep())
     print(f"halo traffic under sync={args.sync}: {halo:.0f} B/sweep total "
           f"({plan.n_boundary} boundary spins, "
           f"{sync.exchanges_per_sweep():.2f} exchanges/sweep); "
           f"TPUv5e napkin: ICI/HBM time ratio "
-          f"{napkin['ici_over_hbm']:.3f} per device")
+          f"{napkin['ici_over_hbm']:.3f} per device, "
+          f"{napkin['ici_latency_share']:.0%} of ICI time is per-exchange "
+          f"latency (the cost the kernel-resident exchange amortizes)")

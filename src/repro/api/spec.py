@@ -190,10 +190,13 @@ class Partition:
     docs/sharding.md) and 1-ulp-close otherwise.
 
     Both may be set at once (a 2-D mesh: rows x chains).  Sharded
-    execution always runs the slot-layout scan path ("sparse" backend
-    semantics) — the sweep-resident fused kernel cannot halo-exchange
-    mid-launch — and needs noise that regenerates per (chain, node)
-    coordinate, so ``noise`` must be "counter" or "lfsr".
+    execution runs the slot-layout scan path ("sparse" backend
+    semantics) or, with counter noise and a `Sync` whose exchange
+    cadence the kernel can own (``halo_every <= sweeps_per_launch``, or
+    no mid-launch exchange at all), the sweep-resident fused kernel with
+    kernel-resident halo exchange (docs/kernels.md §In-kernel halo
+    exchange).  Either way it needs noise that regenerates per
+    (chain, node) coordinate, so ``noise`` must be "counter" or "lfsr".
     """
 
     rows: str | tuple[str, ...] | None = "data"
@@ -232,10 +235,14 @@ class Sync:
       across the intervening compute (fire-and-forget staleness, still
       deterministic and seeded).
     * ``sweeps_per_launch=S`` — fuse S full sweeps into one device-local
-      launch between exchange points.  With no mid-launch exchange points
-      and counter noise the engine runs the launch through the
-      sweep-resident Pallas kernel (`kernels/shard_sweep.py::
-      fused_shard_sweeps`) — spins VMEM-resident, in-kernel RNG.
+      launch between exchange points.  With counter noise the engine
+      runs the launch through the sweep-resident Pallas kernel
+      (`kernels/shard_sweep.py::fused_shard_sweeps`) — spins
+      VMEM-resident, in-kernel RNG.  Mid-launch exchange points no
+      longer break the fusion: any ``halo_every <= sweeps_per_launch``
+      runs with the halo refresh INSIDE the kernel (RDMA on TPU meshes,
+      a bit-exact segmented emulation elsewhere — docs/kernels.md
+      §In-kernel halo exchange).
 
     ``halo_every=1`` keeps the sharded == single-device bit-exactness
     contract; anything looser is a *documented, measured* approximation —
@@ -289,6 +296,20 @@ class Sync:
         """No mid-launch exchange -> a launch can run inside one Pallas
         kernel (the fused per-shard path also needs counter noise)."""
         return self.exchange_points() == (0,)
+
+    @property
+    def fused_compatible(self) -> bool:
+        """Can a fused backend run this policy?  True when there is no
+        mid-launch exchange (`kernel_fusible`) or when the kernel can own
+        the refresh itself — the kernel-resident halo exchange supports
+        any ``halo_every <= sweeps_per_launch``.  The infeasible window
+        is ``sweeps_per_launch < halo_every < 2 * sweeps_per_launch``:
+        exchange points too sparse for the resident segments yet not at
+        launch boundaries only."""
+        if self.kernel_fusible:
+            return True
+        return (isinstance(self.halo_every, int)
+                and self.halo_every <= self.sweeps_per_launch)
 
     def exchanges_per_sweep(self, refresh_for_moments: bool = False
                             ) -> float:
@@ -512,13 +533,17 @@ class SamplerSpec:
                 f"kernel; backend must be 'sparse', 'fused_sparse', or "
                 f"'auto', got {self.backend!r}")
         if self.backend == "fused_sparse":
-            if not sync.kernel_fusible:
+            if not sync.fused_compatible:
+                S = sync.sweeps_per_launch
                 raise ValueError(
                     f"backend 'fused_sparse' runs whole launches inside one "
-                    f"kernel and cannot halo-exchange mid-launch, but "
-                    f"sync={sync} asks for exchanges at within-launch "
-                    f"half-sweeps {sync.exchange_points()[1:]}; use "
-                    f"halo_every=math.inf (or >= 2*sweeps_per_launch), or "
+                    f"kernel; the kernel-resident halo exchange supports "
+                    f"halo_every <= sweeps_per_launch, but sync={sync} has "
+                    f"halo_every={sync.halo_every} with sweeps_per_launch="
+                    f"{S} (exchange points {sync.exchange_points()}); "
+                    f"nearest legal Sync: lower halo_every to {S} "
+                    f"(kernel-resident exchange), raise it to >= {2 * S} "
+                    f"or math.inf (launch-boundary exchange only), or use "
                     f"backend='sparse'")
             if self.noise != "counter":
                 raise ValueError(
@@ -570,8 +595,9 @@ def resolve_backend(spec: SamplerSpec) -> str:
     Session's closures — no env read ever happens at call time.
 
     A sharded spec (mesh=) runs the slot-layout scan per shard
-    ("sparse"), or — when the sync policy is launch-resident with no
-    mid-launch exchanges and the noise is counter — the fused per-shard
+    ("sparse"), or — when the sync policy is launch-resident and
+    fused-compatible (``halo_every <= sweeps_per_launch`` or no
+    mid-launch exchange) and the noise is counter — the fused per-shard
     kernel ("fused_sparse"), which ``auto`` picks by itself.  An env
     default naming a backend the partition cannot honor raises instead of
     being silently overridden.
@@ -610,7 +636,7 @@ def _resolve_sharded_backend(spec: SamplerSpec) -> str:
     to kill.
     """
     sync = spec.sync_policy()
-    fused_ok = (spec.noise == "counter" and sync.kernel_fusible
+    fused_ok = (spec.noise == "counter" and sync.fused_compatible
                 and not _fault_hooks(spec))
     b = spec.backend
     src = f"backend={b!r}"
@@ -625,12 +651,15 @@ def _resolve_sharded_backend(spec: SamplerSpec) -> str:
         return b
     if b == "fused_sparse":
         if not fused_ok:
+            S = sync.sweeps_per_launch
             raise ValueError(
                 f"{src} names the fused per-shard kernel, but this sharded "
                 f"spec cannot run it (needs noise='counter', a sync "
-                f"policy with no mid-launch halo exchanges, and no fault "
-                f"hooks; got noise={spec.noise!r}, sync={sync}, faults="
-                f"{spec.faults}); use 'sparse' or fix the spec")
+                f"policy with halo_every <= sweeps_per_launch or no "
+                f"mid-launch exchange, and no fault hooks; got noise="
+                f"{spec.noise!r}, sync={sync}, faults={spec.faults}); "
+                f"nearest legal Sync: lower halo_every to {S}, raise it "
+                f"to >= {2 * S} or math.inf, or use backend='sparse'")
         return b
     raise ValueError(
         f"{src} cannot run a mesh-sharded spec: the partitioned engine "

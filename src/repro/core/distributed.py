@@ -40,6 +40,7 @@ drives the same `api.Session` engine every other workload uses.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any
 
 import jax
@@ -50,8 +51,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import lfsr as lfsr_mod
 from repro.core.chimera import ChimeraGraph, make_chimera
 from repro.core.hardware import EffectiveChip, HardwareConfig
-from repro.kernels.ref import sparse_neuron_input
+from repro.kernels.ref import halo_exchange_segments, sparse_neuron_input
 from repro.kernels.shard_sweep import (
+    fused_shard_exchange_resident,
     fused_shard_sweeps,
     halo_exchange,
     halo_half_sweep,
@@ -96,9 +98,52 @@ class RowPartition:
     lfsr_perm: np.ndarray | None = None  # (n_shards, n_loc) local flat col
 
 
+# plan_row_partition memo: serving's shard-loss re-plan and every compile-
+# cache miss used to redo the full numpy plan; a ChimeraGraph is a pure
+# function of (rows, cols, k, masked_cells), so those four plus the shard
+# count key the plan exactly.  Plans are frozen dataclasses of read-only
+# tables — every consumer treats them as immutable, so sharing one
+# instance across Sessions is safe.
+_PLAN_CACHE: dict = {}
+PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict:
+    """Copy of the `plan_row_partition` memo hit/miss counters."""
+    return dict(PLAN_CACHE_STATS)
+
+
+def clear_plan_cache() -> None:
+    """Drop memoized plans and zero the counters (tests)."""
+    _PLAN_CACHE.clear()
+    PLAN_CACHE_STATS["hits"] = 0
+    PLAN_CACHE_STATS["misses"] = 0
+
+
 def plan_row_partition(graph: ChimeraGraph, n_shards: int,
                        with_lfsr: bool = False) -> RowPartition:
-    """Cut the cell grid into contiguous row bands (see RowPartition)."""
+    """Cut the cell grid into contiguous row bands (see RowPartition).
+
+    Memoized on (graph identity, n_shards, with_lfsr): a degraded-mesh
+    re-plan (`surviving_mesh` shrinking n_shards back to a previously
+    planned size) and repeat Session compiles hit the cache instead of
+    re-running the numpy planner (`plan_cache_stats()` exposes the
+    counters).
+    """
+    key = (graph.rows, graph.cols, graph.k, tuple(graph.masked_cells),
+           int(n_shards), bool(with_lfsr))
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        PLAN_CACHE_STATS["hits"] += 1
+        return plan
+    plan = _plan_row_partition(graph, n_shards, with_lfsr)
+    PLAN_CACHE_STATS["misses"] += 1
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+def _plan_row_partition(graph: ChimeraGraph, n_shards: int,
+                        with_lfsr: bool = False) -> RowPartition:
     if n_shards < 1 or n_shards > graph.rows:
         raise ValueError(
             f"cannot cut {graph.rows} cell rows into {n_shards} bands")
@@ -343,6 +388,19 @@ class ShardedEngine:
             raise ValueError(f"chains={chains} not divisible by the "
                              f"chain-axis size {self.n_chain}")
         self.b_loc = chains // self.n_chain
+        # fused-resident-exchange: with mid-launch exchange points the
+        # KERNEL owns the halo refresh.  On a real TPU mesh (single named
+        # rows axis, compiled mode) one RDMA launch runs the whole
+        # schedule; everywhere else (interpret mode, CPU hosts, or
+        # REPRO_HALO_EMULATE=1) the engine emulates the same launch
+        # bit-exactly: half-sweep windows of the resident kernel with a
+        # ppermute between windows, inside one jitted graph.
+        self._fused_exchange = self._fused and not sync.kernel_fusible
+        self._halo_rdma = bool(
+            self._fused_exchange and not interpret
+            and jax.default_backend() == "tpu"
+            and len(self.rows_axes) == 1
+            and not os.environ.get("REPRO_HALO_EMULATE"))
         self.plan = plan_row_partition(graph, self.n_row,
                                        with_lfsr=(noise == "lfsr"))
         p = self.plan
@@ -535,11 +593,22 @@ class ShardedEngine:
         hides behind a traced conditional.  Async mode double-buffers the
         exchange: the values consumed at an exchange point were sent at
         the previous one, so the ppermute overlaps the intervening
-        interior compute.  Three loop shapes, picked at compile:
+        interior compute.  Four loop shapes, picked at compile:
 
-          * fused — launch-resident counter-noise policies run each
-            launch as one `fused_shard_sweeps` Pallas call (sample and
-            stats paths; collect/hist fall back to the segment scan).
+          * fused — launch-resident counter-noise policies with
+            launch-boundary-only exchange run each launch as one
+            `fused_shard_sweeps` Pallas call (sample and stats paths;
+            collect/hist fall back to the segment scan).
+          * fused-resident-exchange — fused backends whose policy has
+            mid-launch exchange points: the kernel owns the halo
+            refresh.  TPU meshes run one `fused_shard_exchange_resident`
+            RDMA launch per schedule chunk; interpret/CPU hosts run the
+            bit-exact emulation — the same launch split at the exchange
+            points into `half_offset`/`n_half` windows of the resident
+            kernel with a ppermute between windows, all inside one
+            jitted graph (no host round-trip).  Replaces the segment
+            scan whenever the fused kernel is active (see
+            docs/kernels.md, "In-kernel halo exchange").
           * segment scan — exchanges uniformly spaced at full-sweep
             boundaries (``halo_every`` even or inf): outer scan over
             inter-exchange segments, inner scan over the uniform sweeps
@@ -559,6 +628,7 @@ class ShardedEngine:
         async_ = sync.mode == "async"
         k1_exact = sync.bit_exact
         use_fused = self._fused and not collect and hist_w is None
+        fused_ex = use_fused and ex_pts != (0,)
         if use_fused or ex_pts == (0,):
             seg_sweeps = L                  # exchange at launch starts only
         elif isinstance(k, int) and k % 2 == 0 and (2 * L) % k == 0:
@@ -628,8 +698,9 @@ class ShardedEngine:
                 return accs
 
             def launch(carry, xs_t):
-                """Fused kernel launch, or L statically-unrolled sweeps
-                (the odd-``halo_every`` shapes, incl. the k=1 barrier)."""
+                """Fused kernel launch (boundary-only or kernel-resident
+                exchange), or L statically-unrolled sweeps (the
+                odd-``halo_every`` non-fused shapes, incl. k=1)."""
                 m, ns, hu, hd = carry[0], carry[1], carry[2], carry[3]
                 base = 4
                 pend = ()
@@ -640,7 +711,7 @@ class ShardedEngine:
                 meas_t = xs_t[1] if len(xs_t) > 1 else None
                 outs = []
 
-                if use_fused:
+                if use_fused and not fused_ex:
                     if clamped and cv is not None:
                         m = jnp.where(cm, cv, m)
                     hu, hd, pend = swap(m, hu, hd, pend)
@@ -663,6 +734,82 @@ class ShardedEngine:
                             s_k, c_k = s_k / b, c_k / b
                         accs[0] = accs[0] + s_k
                         accs[1] = accs[1] + c_k
+                elif fused_ex:
+                    # fused-resident-exchange: the kernel owns the halo
+                    # refresh.  k=1 barrier (bit_exact) keeps the host
+                    # post-sweep stats refresh, so the kernel only
+                    # sweeps; every other policy accumulates in-kernel.
+                    if clamped and cv is not None:
+                        m = jnp.where(cm, cv, m)
+                    kwc = {}
+                    if clamped and cv is not None:
+                        kwc = dict(clamp_mask=cm, clamp_values=cv)
+                    exact_stats = accumulate and k1_exact
+                    kern_meas = meas_t \
+                        if (accumulate and not exact_stats) else None
+                    if self._halo_rdma and not exact_stats:
+                        # one RDMA launch per chunk; halos refresh via
+                        # remote async copies inside the kernel.  Async
+                        # consumes the pend buffer at point 0 and the
+                        # kernel's drained final exchange refills it.
+                        hu_in, hd_in = pend if async_ else (hu, hd)
+                        res = fused_shard_exchange_resident(
+                            m, hu_in, hd_in, nbr, w, h, gain, off, rg,
+                            co, masks[0], masks[1], betas_t, ns, chain0,
+                            dev["cols"][0][0], send_up, send_dn,
+                            measured=kern_meas, ex_pts=ex_pts,
+                            mode=sync.mode, axis_name=self._row_name,
+                            n_row=self.n_row, **kwc)
+                        m, ns, hu, hd = res[0], res[1], res[2], res[3]
+                        if async_:
+                            pend = (hu, hd)
+                        if kern_meas is not None:
+                            s_k = res[4]
+                            c_k = res[5][dev["edge_slot"][0],
+                                         dev["edge_e0"][0]]
+                            if self.n_chain == 1:
+                                b = jnp.float32(m.shape[0])
+                                s_k, c_k = s_k / b, c_k / b
+                            accs[0] = accs[0] + s_k
+                            accs[1] = accs[1] + c_k
+                    else:
+                        # bit-exact emulation: split the launch at the
+                        # exchange points into half-sweep windows of the
+                        # same resident kernel, ppermute between them —
+                        # one jitted graph, no host round-trip
+                        s_l = c_l = None
+                        if kern_meas is not None:
+                            s_l = jnp.zeros((n_loc,), jnp.float32)
+                            c_l = jnp.zeros(
+                                (dev["edge_e0"].shape[1],), jnp.float32)
+                        for h0, h1 in halo_exchange_segments(
+                                ex_pts, 2 * L):
+                            hu, hd, pend = swap(m, hu, hd, pend)
+                            res = fused_shard_sweeps(
+                                m, hu, hd, nbr, w, h, gain, off, rg,
+                                co, masks[0], masks[1], betas_t, ns,
+                                chain0, dev["cols"][0][0],
+                                measured=kern_meas,
+                                interpret=self.interpret,
+                                half_offset=h0, n_half=h1 - h0, **kwc)
+                            m, ns = res[0], res[1]
+                            if kern_meas is not None:
+                                s_l = s_l + res[2]
+                                c_l = c_l + res[3][dev["edge_slot"][0],
+                                                   dev["edge_e0"][0]]
+                            if exact_stats and h1 % 2 == 0:
+                                # post-sweep refresh for boundary edges
+                                # — part of the bit-exact contract
+                                ru, rd = exchange(m)
+                                accs = sweep_stats(
+                                    m, ru, rd, meas_t[h1 // 2 - 1],
+                                    accs)
+                        if kern_meas is not None:
+                            if self.n_chain == 1:
+                                b = jnp.float32(m.shape[0])
+                                s_l, c_l = s_l / b, c_l / b
+                            accs[0] = accs[0] + s_l
+                            accs[1] = accs[1] + c_l
                 else:
                     for s in range(L):
                         beta_t = betas_t[s]

@@ -92,6 +92,27 @@ def pbit_sparse_half_sweep_ref(m, nbr_idx, nbr_w, h, gain, off, rand_gain,
                                  update_mask, beta, u)
 
 
+def halo_exchange_segments(ex_pts, n_half):
+    """Exchange points -> half-sweep windows [(h0, h1), ...] of a launch.
+
+    THE segmentation rule of the fused-resident-exchange loop shape: a
+    launch of ``n_half`` half-sweeps splits at its `Sync.exchange_points()`
+    into contiguous windows, each preceded by one halo refresh.  The
+    in-kernel RDMA path (`sweep_sparse_exchange_pallas`) and the host
+    emulation (`ShardedEngine._local_sweeps` windows of
+    `fused_shard_sweeps`) both consume this, which is what makes their
+    exchange placement identical by construction.
+    """
+    pts = tuple(ex_pts)
+    if not pts or pts[0] != 0:
+        raise ValueError(f"exchange points must start at 0, got {pts}")
+    if any(not 0 <= p < n_half for p in pts):
+        raise ValueError(
+            f"exchange points {pts} outside the launch's {n_half} "
+            f"half-sweeps")
+    return tuple(zip(pts, pts[1:] + (n_half,)))
+
+
 def lattice_vertical_update_ref(m_v, m_h, m_v_up, m_v_dn, W_vh, wv_up,
                                 wv_dnin, h, gain, u, parity, color):
     """Oracle for kernels/lattice_update.py (pure jnp)."""

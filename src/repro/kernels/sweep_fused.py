@@ -82,7 +82,8 @@ MAX_HIST_VISIBLE = 12  # one-hot reduction over 2^nv bins; keep it VMEM-sane
 def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
             noise_mode: str, has_clamp: bool, accumulate: bool,
             collect_hist: bool, decimation: int, sparse: bool, D: int,
-            NBp: int, has_coords: bool, stream: bool = False):
+            NBp: int, has_coords: bool, stream: bool = False,
+            half_offset: int = 0, n_half: int | None = None):
     it = iter(refs)
     m0_ref = next(it)
     if sparse:
@@ -179,31 +180,49 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
             m, w, dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) + hrow
 
-    def one_sweep(s, carry):
-        m, st = carry
+    # Launch-relative half-sweep window.  The fused-exchange engine splits
+    # one logical launch into segments at halo exchange points, so a
+    # segment may start mid-sweep (odd half_offset: the color-1 half that
+    # FINISHES sweep half_offset//2) and end mid-sweep (a trailing color-0
+    # half whose sweep the next segment completes).  The noise counter
+    # advances by LOCAL halves — the engine threads noise_state between
+    # segments, so ctr0 already encodes half_offset — while betas /
+    # measured keep full-launch sweep indices.  Defaults (half_offset=0,
+    # n_half=None) reproduce the classic whole-launch loop exactly.
+    n_half_eff = 2 * S if n_half is None else n_half
+    lead = half_offset % 2
+    n_full = max(n_half_eff - lead, 0) // 2
+    tail = max(n_half_eff - lead, 0) % 2
+    s0 = (half_offset + lead) // 2
+
+    def impose_clamp(m):
         if has_clamp:
-            m = jnp.where(clampm_ref[...] != 0, clampv_ref[...], m)
-        beta_col = betas_ref[pl.ds(s, 1), :].reshape(tb, 1)
-        for c in (0, 1):
-            if noise_mode == NOISE_COUNTER:
-                ctr = ctr0 + jnp.uint32(2) * s.astype(jnp.uint32) \
-                    + jnp.uint32(c)
-                u = lfsr_mod.counter_uniform(seed, ctr, rows, cols)
-            else:
-                st = lfsr_mod.lfsr_step_n(st, decimation)
-                u = jnp.take(lfsr_mod.flat_cell_uniforms(st), perm_cols,
-                             axis=-1)
-            I = neuron_current(m)
-            act = jnp.tanh(beta_col * grow * (I + offrow))
-            decision = act + rgrow * u + corow
-            new = jnp.where(decision >= 0.0, 1.0, -1.0)
-            m = jnp.where(masks[c], new, m)
-        if accumulate or collect_hist:
-            wgt = meas_ref[pl.ds(s, 1), :]                      # (1, 1)
-            # padded batch rows update like real chains; keep them out of
-            # the statistics
-            row_ids = (jax.lax.broadcasted_iota(jnp.int32, (tb, 1), 0)
-                       + i * tb)
+            return jnp.where(clampm_ref[...] != 0, clampv_ref[...], m)
+        return m
+
+    def half_update(m, st, s_idx, c, half_j):
+        """One color half-sweep of (launch-relative) sweep s_idx."""
+        if noise_mode == NOISE_COUNTER:
+            ctr = ctr0 + half_j
+            u = lfsr_mod.counter_uniform(seed, ctr, rows, cols)
+        else:
+            st = lfsr_mod.lfsr_step_n(st, decimation)
+            u = jnp.take(lfsr_mod.flat_cell_uniforms(st), perm_cols,
+                         axis=-1)
+        beta_col = betas_ref[pl.ds(s_idx, 1), :].reshape(tb, 1)
+        I = neuron_current(m)
+        act = jnp.tanh(beta_col * grow * (I + offrow))
+        decision = act + rgrow * u + corow
+        new = jnp.where(decision >= 0.0, 1.0, -1.0)
+        return jnp.where(masks[c], new, m), st
+
+    def sweep_stats(m, s_idx):
+        """Accumulate moments/histogram after sweep s_idx completes."""
+        wgt = meas_ref[pl.ds(s_idx, 1), :]                      # (1, 1)
+        # padded batch rows update like real chains; keep them out of
+        # the statistics
+        row_ids = (jax.lax.broadcasted_iota(jnp.int32, (tb, 1), 0)
+                   + i * tb)
         if accumulate:
             mv = jnp.where(row_ids < B, m, 0.0)
             ssum_ref[...] += wgt * jnp.sum(mv, axis=0, keepdims=True)
@@ -227,15 +246,40 @@ def _kernel(*refs, S: int, tb: int, Np: int, n_b: int, B: int,
                       & (row_ids < B)).astype(jnp.float32)
             hist_ref[...] += wgt[0, 0] * jnp.sum(onehot, axis=0,
                                                  keepdims=True)
+
+    m_cur = m0_ref[...].astype(jnp.float32)
+    st_cur = noise_carry0
+    if lead:
+        # clamp re-imposition is idempotent (clamped nodes are excluded
+        # from the color masks), so repeating it at a mid-sweep segment
+        # boundary is bit-identical to the unsplit launch
+        m_cur = impose_clamp(m_cur)
+        m_cur, st_cur = half_update(m_cur, st_cur, half_offset // 2, 1,
+                                    jnp.uint32(0))
+        if accumulate or collect_hist:
+            sweep_stats(m_cur, half_offset // 2)
+
+    def one_sweep(jj, carry):
+        m, st = carry
+        m = impose_clamp(m)
+        for c in (0, 1):
+            hj = (jnp.uint32(lead) + jnp.uint32(2) * jj.astype(jnp.uint32)
+                  + jnp.uint32(c))
+            m, st = half_update(m, st, s0 + jj, c, hj)
+        if accumulate or collect_hist:
+            sweep_stats(m, s0 + jj)
         return m, st
 
-    m_fin, st_fin = jax.lax.fori_loop(
-        0, S, one_sweep, (m0_ref[...].astype(jnp.float32), noise_carry0))
+    m_fin, st_fin = jax.lax.fori_loop(0, n_full, one_sweep, (m_cur, st_cur))
+    if tail:
+        m_fin = impose_clamp(m_fin)
+        m_fin, st_fin = half_update(m_fin, st_fin, s0 + n_full, 0,
+                                    jnp.uint32(lead + 2 * n_full))
     m_out_ref[...] = m_fin.astype(m_out_ref.dtype)
 
     if noise_mode == NOISE_COUNTER:
         noise_out_ref[0, 0] = seed
-        noise_out_ref[0, 1] = ctr0 + jnp.uint32(2 * S)
+        noise_out_ref[0, 1] = ctr0 + jnp.uint32(n_half_eff)
     else:
         noise_out_ref[...] = st_fin
 
@@ -261,10 +305,18 @@ def _launch(
     visible_idx, *, sparse, noise_mode, decimation, gather_perm,
     accumulate, collect_hist, n_visible, block_b, interpret,
     coord_offset=None, next_nbr_w=None, next_h=None,
+    half_offset=0, n_half=None,
 ):
     """Shared plumbing for the dense and sparse sweep-resident engines."""
     B, N = m.shape
     S = betas.shape[0]
+    # normalize the half-sweep window: n_half=None means "to launch end"
+    n_half = 2 * S - half_offset if n_half is None else n_half
+    if not (0 <= half_offset and 0 <= n_half
+            and half_offset + n_half <= 2 * S):
+        raise ValueError(
+            f"half-sweep window [{half_offset}, {half_offset + n_half}) "
+            f"falls outside the launch's 2*S={2 * S} half-sweeps")
     out_dtype = m.dtype
     stream = next_nbr_w is not None
     if stream:
@@ -456,7 +508,7 @@ def _launch(
             accumulate=accumulate, collect_hist=collect_hist,
             decimation=decimation, sparse=sparse,
             D=D if sparse else 0, NBp=NBp, has_coords=has_coords,
-            stream=stream),
+            stream=stream, half_offset=half_offset, n_half=n_half),
         grid=(n_b,),
         in_specs=in_specs,
         out_specs=tuple(out_specs),
@@ -541,7 +593,8 @@ def sweep_fused_pallas(
 @functools.partial(
     jax.jit,
     static_argnames=("noise_mode", "decimation", "gather_perm", "accumulate",
-                     "collect_hist", "n_visible", "block_b", "interpret"),
+                     "collect_hist", "n_visible", "block_b", "interpret",
+                     "half_offset", "n_half"),
 )
 def sweep_sparse_pallas(
     m: jax.Array,                 # (B, N) spins in {-1, +1}
@@ -570,6 +623,8 @@ def sweep_sparse_pallas(
     n_visible: int = 0,
     block_b: int = 128,
     interpret: bool = True,
+    half_offset: int = 0,
+    n_half: int | None = None,
 ):
     """Run S resident sweeps on the Chimera-native fixed-degree layout.
 
@@ -578,6 +633,15 @@ def sweep_sparse_pallas(
     correlation ``c_slots[d, i] = Σ m_i · m_{nbr_idx[d, i]}`` instead of a
     Gram matrix — read edge (i, j) at ``c_slots[slot_of(i→j), i]`` (see
     ChimeraGraph.edge_slots).  Never materializes anything O(N²).
+
+    ``half_offset``/``n_half`` select a half-sweep window of the launch:
+    run ``n_half`` color half-sweeps starting at (launch-relative) half
+    ``half_offset``, with betas/measured still indexed by full-launch
+    sweep number.  The fused-exchange engine uses this to split one
+    logical launch at halo exchange points inside a single jitted graph;
+    chaining windows (threading ``noise_state`` between calls) is
+    bit-identical to the unsplit launch, and per-window moment partials
+    sum exactly to the whole-launch moments.
     """
     return _launch(
         m, None, nbr_idx, nbr_w, h, gain, off, rand_gain, comp_off,
@@ -586,12 +650,14 @@ def sweep_sparse_pallas(
         sparse=True, noise_mode=noise_mode, decimation=decimation,
         gather_perm=gather_perm, accumulate=accumulate,
         collect_hist=collect_hist, n_visible=n_visible, block_b=block_b,
-        interpret=interpret, coord_offset=coord_offset)
+        interpret=interpret, coord_offset=coord_offset,
+        half_offset=half_offset, n_half=n_half)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("decimation", "block_b", "interpret"),
+    static_argnames=("decimation", "block_b", "interpret",
+                     "half_offset", "n_half"),
 )
 def sweep_sparse_stream_pallas(
     m: jax.Array,                 # (B, N) spins in {-1, +1}
@@ -615,6 +681,8 @@ def sweep_sparse_stream_pallas(
     decimation: int = 8,
     block_b: int = 128,
     interpret: bool = True,
+    half_offset: int = 0,
+    n_half: int | None = None,
 ):
     """`sweep_sparse_pallas` with a double-buffered program upload: run S
     resident sweeps of the CURRENT program while the NEXT program's
@@ -640,4 +708,408 @@ def sweep_sparse_stream_pallas(
         sparse=True, noise_mode=NOISE_COUNTER, decimation=decimation,
         gather_perm=None, accumulate=False, collect_hist=False,
         n_visible=0, block_b=block_b, interpret=interpret,
-        coord_offset=coord_offset, next_nbr_w=next_nbr_w, next_h=next_h)
+        coord_offset=coord_offset, next_nbr_w=next_nbr_w, next_h=next_h,
+        half_offset=half_offset, n_half=n_half)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-resident halo exchange (hardware RDMA path)
+# ---------------------------------------------------------------------------
+#
+# One resident launch per shard refreshes its halos MID-FLIGHT: at every
+# `Sync.exchange_points()` half-sweep the kernel gathers its O(√N) boundary
+# spins into a VMEM send buffer and `pltpu.make_async_remote_copy`s them
+# into the row neighbor's second halo VMEM slot, double-buffered on
+# exchange parity exactly like the PR-9 program stream.  `mode="barrier"`
+# waits for the incoming copy before the next half-sweep consumes it;
+# `mode="async"` installs the PREVIOUS exchange's values and lets the
+# in-flight copy overlap the segment's compute — the same staleness
+# contract as the host engine's pend-buffer.  Host CI cannot run RDMA:
+# `REPRO_PALLAS_INTERPRET` runs the bit-exact emulation instead
+# (ShardedEngine's fused-resident-exchange loop shape: the same launch
+# split at exchange points via `half_offset`/`n_half`, ppermute between
+# segments, one jitted graph).  This kernel compiles only on real TPU
+# meshes and is pending on-TPU validation (ROADMAP).
+
+_HALO_UP, _HALO_DN = 0, 1  # recv-buffer direction slots
+
+
+def _exchange_kernel(*refs, S, tb, Np, B, n_loc, H, Hp, segments, mode,
+                     has_clamp, accumulate, D, axis_name, n_row,
+                     collective_id, stream):
+    it = iter(refs)
+    m0_ref = next(it)                         # (tb, Np) [local|hu|hd]
+    idx_ref, w_ref = next(it), next(it)       # (Dp, Np)
+    h_ref, g_ref, off_ref, rg_ref, co_ref = (next(it) for _ in range(5))
+    mask0_ref, mask1_ref = next(it), next(it)
+    betas_ref = next(it)                      # (S, tb)
+    sendu_ref, sendd_ref = next(it), next(it)  # (1, Hp) boundary gathers
+    clampm_ref = next(it) if has_clamp else None
+    clampv_ref = next(it) if has_clamp else None
+    meas_ref = next(it) if accumulate else None
+    coords_ref = next(it)
+    noise_in_ref = next(it)
+    if stream:
+        next_w_ref, next_h_ref = next(it), next(it)
+    m_out_ref = next(it)
+    noise_out_ref = next(it)
+    if accumulate:
+        ssum_out_ref, csum_out_ref = next(it), next(it)
+    if stream:
+        staged_w_out_ref, staged_h_out_ref = next(it), next(it)
+    sbuf_ref = next(it)                       # (2, 2, tb, Hp) send slots
+    rbuf_ref = next(it)                       # (2, 2, tb, Hp) recv slots
+    send_sem = next(it)                       # DMA (2, 2) [dir, parity]
+    recv_sem = next(it)                       # DMA (2, 2)
+    if accumulate:
+        ssum_ref, csum_ref = next(it), next(it)
+    if stream:
+        slot_w_ref, slot_h_ref = next(it), next(it)
+
+    my = jax.lax.axis_index(axis_name)
+    up_ok = my > 0                  # row above exists
+    dn_ok = my < n_row - 1          # row below exists
+    n_nbr = up_ok.astype(jnp.int32) + dn_ok.astype(jnp.int32)
+
+    if accumulate:
+        ssum_ref[...] = jnp.zeros_like(ssum_ref)
+        csum_ref[...] = jnp.zeros_like(csum_ref)
+    if stream:
+        # double-buffered program upload staged up front, overlapping the
+        # resident sweeps (shared launch with the halo refresh)
+        slot_w_ref[...] = next_w_ref[...]
+        slot_h_ref[...] = next_h_ref[...]
+
+    hrow, grow = h_ref[...], g_ref[...]
+    offrow, rgrow, corow = off_ref[...], rg_ref[...], co_ref[...]
+    masks = (mask0_ref[...] != 0, mask1_ref[...] != 0)
+    seed = noise_in_ref[0, 0]
+    ctr0 = noise_in_ref[0, 1]
+    row0 = coords_ref[0, 0]
+    col0 = coords_ref[0, 1]
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (tb, Np), 0) + row0
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (tb, Np), 1) + col0
+
+    # neighbor barrier before the first RDMA: nobody writes into a peer
+    # still draining its previous launch
+    barrier = pltpu.get_barrier_semaphore()
+
+    @pl.when(up_ok)
+    def _sig_up():
+        pltpu.semaphore_signal(
+            barrier, inc=1, device_id=(my - 1,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL)
+
+    @pl.when(dn_ok)
+    def _sig_dn():
+        pltpu.semaphore_signal(
+            barrier, inc=1, device_id=(my + 1,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL)
+
+    pltpu.semaphore_wait(barrier, n_nbr)
+
+    def start_exchange(m, parity):
+        """Gather boundary spins and fire both neighbor RDMAs."""
+        sbuf_ref[0, parity] = jnp.take(m, sendu_ref[0, :], axis=1)
+        sbuf_ref[1, parity] = jnp.take(m, sendd_ref[0, :], axis=1)
+
+        @pl.when(up_ok)
+        def _send_up():
+            # my first-row boundary becomes the UP neighbor's halo_dn
+            pltpu.make_async_remote_copy(
+                src_ref=sbuf_ref.at[0, parity],
+                dst_ref=rbuf_ref.at[_HALO_DN, parity],
+                send_sem=send_sem.at[0, parity],
+                recv_sem=recv_sem.at[_HALO_DN, parity],
+                device_id=(my - 1,),
+                device_id_type=pltpu.DeviceIdType.LOGICAL).start()
+
+        @pl.when(dn_ok)
+        def _send_dn():
+            # my last-row boundary becomes the DOWN neighbor's halo_up
+            pltpu.make_async_remote_copy(
+                src_ref=sbuf_ref.at[1, parity],
+                dst_ref=rbuf_ref.at[_HALO_UP, parity],
+                send_sem=send_sem.at[1, parity],
+                recv_sem=recv_sem.at[_HALO_UP, parity],
+                device_id=(my + 1,),
+                device_id_type=pltpu.DeviceIdType.LOGICAL).start()
+
+    def install_halos(m, parity):
+        """Wait the incoming copies of `parity` and refresh halo columns."""
+        @pl.when(up_ok)
+        def _wait_up():
+            pltpu.semaphore_wait(recv_sem.at[_HALO_UP, parity], 1)
+
+        @pl.when(dn_ok)
+        def _wait_dn():
+            pltpu.semaphore_wait(recv_sem.at[_HALO_DN, parity], 1)
+        hu = jnp.where(up_ok, rbuf_ref[_HALO_UP, parity][:, :H], 0.0)
+        hd = jnp.where(dn_ok, rbuf_ref[_HALO_DN, parity][:, :H], 0.0)
+        m = jax.lax.dynamic_update_slice(m, hu, (0, n_loc))
+        return jax.lax.dynamic_update_slice(m, hd, (0, n_loc + H))
+
+    def wait_sends(parity):
+        @pl.when(up_ok)
+        def _ws_up():
+            pltpu.semaphore_wait(send_sem.at[0, parity], 1)
+
+        @pl.when(dn_ok)
+        def _ws_dn():
+            pltpu.semaphore_wait(send_sem.at[1, parity], 1)
+
+    def half_update(m, s_idx, c, half_j):
+        ctr = ctr0 + half_j
+        u = lfsr_mod.counter_uniform(seed, ctr, rows, cols)
+        beta_col = betas_ref[pl.ds(s_idx, 1), :].reshape(tb, 1)
+        acc = jnp.zeros((tb, Np), jnp.float32)
+        for d in range(D):
+            acc = acc + w_ref[pl.ds(d, 1), :] * jnp.take(
+                m, idx_ref[d, :], axis=-1)
+        act = jnp.tanh(beta_col * grow * (acc + hrow + offrow))
+        decision = act + rgrow * u + corow
+        new = jnp.where(decision >= 0.0, 1.0, -1.0)
+        return jnp.where(masks[c], new, m)
+
+    def impose_clamp(m):
+        if has_clamp:
+            return jnp.where(clampm_ref[...] != 0, clampv_ref[...], m)
+        return m
+
+    def sweep_stats(m, s_idx):
+        wgt = meas_ref[pl.ds(s_idx, 1), :]
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, (tb, 1), 0)
+        mv = jnp.where(row_ids < B, m, 0.0)
+        ssum_ref[...] += wgt * jnp.sum(mv, axis=0, keepdims=True)
+        for d in range(D):
+            corr = jnp.sum(mv * jnp.take(mv, idx_ref[d, :], axis=-1),
+                           axis=0, keepdims=True)
+            csum_ref[pl.ds(d, 1), :] += wgt[0, 0] * corr
+
+    m = m0_ref[...].astype(jnp.float32)
+    n_ex = len(segments)
+    for e, (h0, h1) in enumerate(segments):
+        parity = e % 2
+        if e >= 2:
+            # reusing this parity's send slots: previous copy must be out
+            wait_sends(parity)
+        start_exchange(m, parity)
+        if mode == "barrier":
+            m = install_halos(m, parity)
+        elif e > 0:
+            # async: consume the PREVIOUS exchange's values; exchange e
+            # stays in flight behind this segment's compute
+            m = install_halos(m, (e - 1) % 2)
+        # run the [h0, h1) half-sweep window (lead / full / tail — the
+        # same structure as _kernel's segmented window)
+        lead = h0 % 2
+        n_full = (h1 - h0 - lead) // 2
+        tail = (h1 - h0 - lead) % 2
+        s0 = (h0 + lead) // 2
+        if lead:
+            m = impose_clamp(m)
+            m = half_update(m, h0 // 2, 1, jnp.uint32(h0))
+            if accumulate:
+                sweep_stats(m, h0 // 2)
+
+        def one_sweep(jj, m, s0=s0, base=h0 + lead):
+            m = impose_clamp(m)
+            for c in (0, 1):
+                hj = (jnp.uint32(base)
+                      + jnp.uint32(2) * jj.astype(jnp.uint32)
+                      + jnp.uint32(c))
+                m = half_update(m, s0 + jj, c, hj)
+            if accumulate:
+                sweep_stats(m, s0 + jj)
+            return m
+
+        m = jax.lax.fori_loop(0, n_full, one_sweep, m)
+        if tail:
+            m = impose_clamp(m)
+            m = half_update(m, s0 + n_full, 0, jnp.uint32(h1 - 1))
+
+    # drain every DMA still in flight before the kernel exits
+    if mode != "barrier":
+        # async: the final exchange is the NEXT launch's first consume
+        # (the engine's pend buffer) — install it into the halo columns
+        # so m_out carries it across the launch boundary
+        m = install_halos(m, (n_ex - 1) % 2)
+    for parity in range(min(n_ex, 2)):
+        # sends not yet retired by the e>=2 slot-reuse waits: the last
+        # exchange on each parity
+        wait_sends(parity)
+
+    m_out_ref[...] = m.astype(m_out_ref.dtype)
+    noise_out_ref[0, 0] = seed
+    noise_out_ref[0, 1] = ctr0 + jnp.uint32(2 * S)
+    if accumulate:
+        ssum_out_ref[...] = ssum_ref[...]
+        csum_out_ref[...] = csum_ref[...]
+    if stream:
+        staged_w_out_ref[...] = slot_w_ref[...]
+        staged_h_out_ref[...] = slot_h_ref[...]
+
+
+def sweep_sparse_exchange_pallas(
+    m_ext: jax.Array,             # (B, N_ext) [local | halo_up | halo_dn]
+    nbr_idx: jax.Array,           # (D, N_ext) ext-local neighbor table
+    nbr_w: jax.Array,             # (D, N_ext)
+    h: jax.Array,
+    gain: jax.Array,
+    off: jax.Array,
+    rand_gain: jax.Array,
+    comp_off: jax.Array,
+    mask0: jax.Array,             # (N_ext,) halo columns excluded
+    mask1: jax.Array,
+    betas: jax.Array,             # (S, B)
+    noise_state: jax.Array,       # (2,) uint32
+    send_up: jax.Array,           # (H,) local cols of the first-row verts
+    send_dn: jax.Array,           # (H,) local cols of the last-row verts
+    clamp_mask: jax.Array | None = None,
+    clamp_values: jax.Array | None = None,
+    measured: jax.Array | None = None,
+    coord_offset: jax.Array | None = None,
+    next_nbr_w: jax.Array | None = None,
+    next_h: jax.Array | None = None,
+    *,
+    n_loc: int,
+    halo: int,
+    ex_pts: tuple,                # launch-relative half-sweep indices
+    mode: str = "barrier",
+    axis_name: str = "row",
+    n_row: int,
+    collective_id: int = 7,
+    interpret: bool = False,
+):
+    """S resident sweeps with IN-KERNEL halo refresh at every exchange
+    point — the hardware twin of the engine's fused-resident-exchange
+    emulation (identical noise counters, identical exchange-point
+    staleness), pending on-TPU validation.
+
+    Must run under ``shard_map`` over a 1-D ``axis_name`` mesh of
+    ``n_row`` devices.  Single batch tile (the exchange needs the whole
+    shard's boundary at once).  Raises in interpret mode: host CI runs
+    the segmented emulation (`ShardedEngine._local_sweeps`), which this
+    kernel must match bit-for-bit on hardware.
+    """
+    if interpret:
+        raise NotImplementedError(
+            "in-kernel RDMA halo exchange needs a real TPU mesh; "
+            "interpret mode runs the bit-exact segmented emulation "
+            "(ShardedEngine's fused-resident-exchange loop shape)")
+    if pltpu is None or _COMPILER_PARAMS is None:
+        raise RuntimeError("pallas TPU backend unavailable")
+    from repro.kernels.ref import halo_exchange_segments
+
+    B, N = m_ext.shape
+    S = betas.shape[0]
+    H = halo
+    D = nbr_idx.shape[0]
+    segments = halo_exchange_segments(ex_pts, 2 * S)
+    accumulate = measured is not None
+    has_clamp = clamp_mask is not None and clamp_values is not None
+    stream = next_nbr_w is not None
+    if stream and accumulate:
+        raise ValueError("program streaming excludes in-kernel moments")
+
+    Np = _round_up(N, 128)
+    Hp = _round_up(max(H, 1), 128)
+    tb = _round_up(B, 8)
+    Dp = _round_up(D, 8)
+
+    row = lambda x: _pad_axis(
+        jnp.asarray(x).reshape(1, -1).astype(jnp.float32), 128, 1)
+    mp = _pad_axis(_pad_axis(m_ext, tb, 0), 128, 1)
+    idxp = _pad_axis(_pad_axis(jnp.asarray(nbr_idx, jnp.int32), Dp, 0),
+                     128, 1)
+    wp = _pad_axis(_pad_axis(jnp.asarray(nbr_w, jnp.float32), Dp, 0),
+                   128, 1)
+    m0p = _pad_axis(jnp.asarray(mask0).reshape(1, -1).astype(jnp.int8),
+                    128, 1, 0)
+    m1p = _pad_axis(jnp.asarray(mask1).reshape(1, -1).astype(jnp.int8),
+                    128, 1, 0)
+    betasp = _pad_axis(jnp.asarray(betas, jnp.float32), tb, 1)
+    sup = _pad_axis(jnp.asarray(send_up, jnp.int32).reshape(1, -1), 128, 1)
+    sdn = _pad_axis(jnp.asarray(send_dn, jnp.int32).reshape(1, -1), 128, 1)
+
+    full = lambda shape: pl.BlockSpec(shape, lambda: tuple(
+        0 for _ in shape))
+    in_specs = [full((tb, Np)), full((Dp, Np)), full((Dp, Np))]
+    args = [mp, idxp, wp]
+    in_specs += [full((1, Np))] * 7 + [full((S, tb)),
+                                       full((1, Hp)), full((1, Hp))]
+    args += [row(h), row(gain), row(off), row(rand_gain), row(comp_off),
+             m0p, m1p, betasp, sup, sdn]
+    if has_clamp:
+        in_specs += [full((1, Np)), full((tb, Np))]
+        args += [_pad_axis(jnp.asarray(clamp_mask).reshape(1, -1)
+                           .astype(jnp.int8), 128, 1, 0),
+                 _pad_axis(_pad_axis(
+                     jnp.asarray(clamp_values, jnp.float32), tb, 0),
+                     128, 1)]
+    if accumulate:
+        in_specs.append(full((S, 1)))
+        args.append(jnp.asarray(measured, jnp.float32).reshape(S, 1))
+    in_specs.append(full((1, 2)))
+    args.append(jnp.zeros((1, 2), jnp.uint32) if coord_offset is None
+                else jnp.asarray(coord_offset, jnp.uint32).reshape(1, 2))
+    in_specs.append(full((1, 2)))
+    args.append(jnp.asarray(noise_state, jnp.uint32).reshape(1, 2))
+    if stream:
+        in_specs += [full((Dp, Np)), full((1, Np))]
+        args += [_pad_axis(_pad_axis(
+            jnp.asarray(next_nbr_w, jnp.float32), Dp, 0), 128, 1),
+            row(next_h)]
+
+    out_shape = [jax.ShapeDtypeStruct((tb, Np), m_ext.dtype),
+                 jax.ShapeDtypeStruct((1, 2), jnp.uint32)]
+    out_specs = [full((tb, Np)), full((1, 2))]
+    if accumulate:
+        out_shape += [jax.ShapeDtypeStruct((1, Np), jnp.float32),
+                      jax.ShapeDtypeStruct((Dp, Np), jnp.float32)]
+        out_specs += [full((1, Np)), full((Dp, Np))]
+    if stream:
+        out_shape += [jax.ShapeDtypeStruct((Dp, Np), jnp.float32),
+                      jax.ShapeDtypeStruct((1, Np), jnp.float32)]
+        out_specs += [full((Dp, Np)), full((1, Np))]
+
+    scratch = [_VMEM((2, 2, tb, Hp), jnp.float32),   # send slots
+               _VMEM((2, 2, tb, Hp), jnp.float32),   # recv slots
+               pltpu.SemaphoreType.DMA((2, 2)),
+               pltpu.SemaphoreType.DMA((2, 2))]
+    if accumulate:
+        scratch += [_VMEM((1, Np), jnp.float32), _VMEM((Dp, Np),
+                                                       jnp.float32)]
+    if stream:
+        scratch += [_VMEM((Dp, Np), jnp.float32), _VMEM((1, Np),
+                                                        jnp.float32)]
+
+    kw = {"compiler_params": _COMPILER_PARAMS(
+        dimension_semantics=(), has_side_effects=True,
+        collective_id=collective_id)}
+    if stream:
+        # stream excludes accumulate, so staged outputs sit at 2/3
+        kw["input_output_aliases"] = {len(args) - 2: 2, len(args) - 1: 3}
+    outs = pl.pallas_call(
+        functools.partial(
+            _exchange_kernel, S=S, tb=tb, Np=Np, B=B, n_loc=n_loc, H=H,
+            Hp=Hp, segments=segments, mode=mode, has_clamp=has_clamp,
+            accumulate=accumulate, D=D, axis_name=axis_name, n_row=n_row,
+            collective_id=collective_id, stream=stream),
+        grid=(),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        scratch_shapes=scratch,
+        interpret=False,
+        **kw,
+    )(*args)
+
+    result = [outs[0][:B, :N], outs[1].reshape(2)]
+    k = 2
+    if accumulate:
+        result += [outs[k][0, :N], outs[k + 1][:D, :N]]
+        k += 2
+    if stream:
+        result += [outs[k][:D, :N], outs[k + 1][0, :N]]
+    return tuple(result)

@@ -44,6 +44,7 @@ def _mesh(shape, axes) -> Mesh:
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip
 ICI_BW = 50e9                   # bytes/s per link (~per axis neighbor)
+ICI_LAT_S = 1e-6                # per-transfer ICI latency (hop setup cost)
 HBM_BYTES = 16 * 2**30          # 16 GiB per chip
 
 
@@ -68,14 +69,27 @@ def make_line_mesh(n: int | None = None, axis: str = "data") -> Mesh:
     return _mesh((n,), (axis,))
 
 
-def halo_vs_hbm_seconds(halo_bytes: int, hbm_bytes: int) -> dict:
+def halo_vs_hbm_seconds(halo_bytes: int, hbm_bytes: int,
+                        exchanges: float = 0.0) -> dict:
     """Napkin math for one sharded sweep (docs/sharding.md): time on the
     ICI link moving the halo vs time streaming the local state+weights
     from HBM.  Ratio << 1 means the halo exchange hides entirely behind
-    the local half-sweep — the regime the O(√N) boundary guarantees."""
-    t_ici = halo_bytes / ICI_BW
+    the local half-sweep — the regime the O(√N) boundary guarantees.
+
+    ``exchanges`` is the policy's per-sweep transfer count
+    (`Sync.exchanges_per_sweep()`); each transfer pays a fixed
+    ``ICI_LAT_S`` hop-setup latency on top of the bandwidth term.  Small
+    halos are latency-bound — the cost the kernel-resident exchange
+    amortizes by keeping the refresh inside one launch —
+    ``ici_latency_share`` says how much of the ICI time that fixed cost
+    is."""
+    t_bw = halo_bytes / ICI_BW
+    t_lat = exchanges * ICI_LAT_S
+    t_ici = t_bw + t_lat
     t_hbm = hbm_bytes / HBM_BW
     return {"ici_s": t_ici, "hbm_s": t_hbm,
+            "ici_latency_s": t_lat,
+            "ici_latency_share": t_lat / max(t_ici, 1e-30),
             "ici_over_hbm": t_ici / max(t_hbm, 1e-30)}
 
 

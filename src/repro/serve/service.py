@@ -600,7 +600,12 @@ class SamplerService:
         self.mesh = surviving_mesh(self.mesh, self._dead)
         self.state = "degraded" if self.mesh is not None else "single"
         # every Session compiled against the dead mesh is garbage now;
-        # survivors recompile lazily on the re-planned mesh
+        # survivors recompile lazily on the re-planned mesh.  That
+        # recompile rebuilds the whole engine closure — including the
+        # fused-resident-exchange loop shape when the sync policy has
+        # mid-launch exchange points — and the numpy row plan itself
+        # comes from the memoized plan_row_partition cache, so a re-plan
+        # onto a previously-seen shard count never recomputes it
         self.metrics["cache_invalidated"] += self.cache.invalidate(
             lambda fp, e: e.meshed)
 

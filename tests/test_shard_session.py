@@ -97,10 +97,13 @@ def test_partition_validation_errors():
         _spec(g, mesh=mesh, partition=api.Partition(rows="rows")).validate()
     with pytest.raises(ValueError, match="counter"):
         _spec(g, mesh=mesh, noise="philox").validate()
-    # fused_sparse needs a launch-resident sync policy (PR 5): under the
-    # default per-half-sweep barrier it still raises, with the new reason
-    with pytest.raises(ValueError, match="mid-launch"):
-        _spec(g, mesh=mesh, backend="fused_sparse").validate()
+    # fused_sparse under the default per-half-sweep barrier is legal now
+    # that the kernel owns the halo refresh (PR 10); the infeasible
+    # window S < halo_every < 2S still raises, naming the nearest fix
+    _spec(g, mesh=mesh, backend="fused_sparse").validate()
+    with pytest.raises(ValueError, match="nearest legal Sync"):
+        _spec(g, mesh=mesh, backend="fused_sparse").replace(
+            sync=api.Sync(halo_every=6, sweeps_per_launch=4)).validate()
     with pytest.raises(ValueError, match="disjoint"):
         _spec(g, mesh=mesh,
               partition=api.Partition(rows="data",

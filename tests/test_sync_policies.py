@@ -118,9 +118,16 @@ def test_spec_sync_validation(monkeypatch):
     mach = _machine(g)
     with pytest.raises(ValueError, match="mesh=None"):
         mach.sampler_spec(sync=api.Sync()).validate()
-    # fused_sparse needs a fusible policy...
-    with pytest.raises(ValueError, match="mid-launch"):
-        _spec(mach, mesh, api.Sync(halo_every=4, sweeps_per_launch=4),
+    # halo_every <= sweeps_per_launch is fused-legal now (the kernel owns
+    # the exchange); the infeasible window S < k < 2S raises an error
+    # that names the nearest legal Sync instead of only the constraint
+    _spec(mach, mesh, api.Sync(halo_every=4, sweeps_per_launch=4),
+          backend="fused_sparse").validate()
+    with pytest.raises(ValueError,
+                       match=r"nearest legal Sync.*lower halo_every to 4"
+                             r".*raise it to >= 8 or math\.inf.*"
+                             r"backend='sparse'"):
+        _spec(mach, mesh, api.Sync(halo_every=6, sweeps_per_launch=4),
               backend="fused_sparse").validate()
     # ...and counter noise
     with pytest.raises(ValueError, match="counter"):
@@ -145,8 +152,17 @@ def test_spec_sync_validation(monkeypatch):
     with pytest.raises(ValueError, match="REPRO_PBIT_BACKEND"):
         api.resolve_backend(_spec(mach, mesh, backend="auto"))
     monkeypatch.setenv("REPRO_PBIT_BACKEND", "fused_sparse")
-    with pytest.raises(ValueError, match="REPRO_PBIT_BACKEND"):
-        api.resolve_backend(_spec(mach, mesh, backend="auto"))  # not fusible
+    # the default barrier is fused-compatible now; only the infeasible
+    # S < k < 2S window still rejects the env-pinned fused kernel, and
+    # the error names both the env var and the nearest legal Sync
+    assert api.resolve_backend(
+        _spec(mach, mesh, backend="auto")) == "fused_sparse"
+    with pytest.raises(ValueError,
+                       match=r"REPRO_PBIT_BACKEND.*nearest legal Sync.*"
+                             r"lower halo_every to 4"):
+        api.resolve_backend(_spec(
+            mach, mesh, api.Sync(halo_every=6, sweeps_per_launch=4),
+            backend="auto"))
     assert api.resolve_backend(_spec(
         mach, mesh, api.Sync(halo_every=math.inf, sweeps_per_launch=4),
         backend="auto")) == "fused_sparse"
